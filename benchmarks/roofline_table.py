@@ -1,0 +1,92 @@
+"""Render EXPERIMENTS.md §Dry-run / §Roofline tables from dryrun results.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod1]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+RESULTS = os.path.join(os.path.dirname(__file__), "dryrun_results")
+
+ARCH_ORDER = ["qwen3-8b", "internlm2-20b", "minicpm-2b", "qwen3-32b",
+              "mixtral-8x7b", "grok-1-314b", "mamba2-370m", "hubert-xlarge",
+              "internvl2-76b", "recurrentgemma-2b"]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh: str) -> dict:
+    out = {}
+    for path in glob.glob(os.path.join(RESULTS, f"*__{mesh}.json")):
+        with open(path) as f:
+            d = json.load(f)
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_s(x: float) -> str:
+    if x >= 1.0:
+        return f"{x:.2f}s"
+    if x >= 1e-3:
+        return f"{x * 1e3:.1f}ms"
+    return f"{x * 1e6:.0f}us"
+
+
+def roofline_fraction(r: dict) -> float:
+    """MODEL-flop time / dominant roofline term — the perf score basis."""
+    ideal = r["model_flops_total"] / (r["chips"] * 197e12)
+    dom = max(r["compute_s"], r["memory_s"], r["collective_s"])
+    return ideal / dom if dom else 0.0
+
+
+def table(mesh: str, results: dict) -> str:
+    lines = [
+        f"### Roofline — {mesh} "
+        f"({'512 chips (2x16x16)' if mesh == 'pod2' else '256 chips (16x16)'})",
+        "",
+        "| arch | shape | compute | memory | collective | bound | "
+        "useful FLOPs ratio | roofline fraction | peak HBM/dev (TPU est) | "
+        "fits 16G |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = results.get((arch, shape))
+            if d is None:
+                lines.append(f"| {arch} | {shape} | — | — | — | — | — | — "
+                             f"| MISSING | — |")
+                continue
+            if not d.get("supported", True):
+                lines.append(f"| {arch} | {shape} | n/a | n/a | n/a | n/a "
+                             f"| n/a | n/a | n/a — {d['reason']} | n/a |")
+                continue
+            if not d.get("ok", False):
+                lines.append(f"| {arch} | {shape} | FAIL | | | | | | "
+                             f"{d.get('error', '')[:60]} | |")
+                continue
+            r = d["roofline"]
+            peak = d["memory"]["peak_hbm_tpu_est"]
+            frac = roofline_fraction(r)
+            lines.append(
+                f"| {arch} | {shape} | {fmt_s(r['compute_s'])} | "
+                f"{fmt_s(r['memory_s'])} | {fmt_s(r['collective_s'])} | "
+                f"{r['bound']} | {r['useful_flops_ratio']:.2f} | "
+                f"{frac:.1%} | {peak / 2 ** 30:.1f} GiB | "
+                f"{'yes' if peak <= 16 * 2 ** 30 else 'NO'} |")
+    return "\n".join(lines)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="both", choices=["pod1", "pod2", "both"])
+    args = ap.parse_args()
+    meshes = ["pod1", "pod2"] if args.mesh == "both" else [args.mesh]
+    for mesh in meshes:
+        print(table(mesh, load(mesh)))
+        print()
+
+
+if __name__ == "__main__":
+    main()

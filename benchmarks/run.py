@@ -1,0 +1,223 @@
+"""Benchmark harness — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows. Usage:
+  PYTHONPATH=src python -m benchmarks.run [--quick]
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import numpy as np
+
+from benchmarks import baselines, workloads
+from repro.core.cost_model import CostModel, FfclStats, FpgaFabric, TpuFabric
+from repro.core.gate_ir import random_graph
+from repro.core.optimizer import binary_search, sweep
+from repro.core.scheduler import compile_graph
+from repro.core.simulator import simulate_no_pipeline, simulate_pipeline
+
+ROWS: list[tuple[str, float, str]] = []
+CLOCK = TpuFabric().clock_hz
+
+
+def row(name: str, us: float, derived: str = "") -> None:
+    ROWS.append((name, us, derived))
+    print(f"{name},{us:.3f},{derived}")
+
+
+def cycles_us(cycles: float) -> float:
+    return cycles / CLOCK * 1e6
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6: cost model vs "actual" (discrete-event simulator), layer conv7/8
+# ---------------------------------------------------------------------------
+
+def bench_cost_model_validation(quick: bool) -> None:
+    wl = workloads.build_workload(
+        [workloads.VGG16_LAYERS[6]], n_samples=96 if quick else 160)
+    lw = wl[0]
+    model = CostModel()
+    m = 16 if quick else 64     # filters pipelined per launch
+    errs = []
+    for n_unit in (64, 256, 1024):
+        prog = compile_graph(lw.graph, n_unit=n_unit)
+        sim = simulate_pipeline([prog] * m, n_input_vectors=lw.n_patches)
+        mdl = model.total_cycles(lw.stats, n_unit, lw.n_patches, m_modules=m)
+        err = (mdl - sim.total_cycles) / sim.total_cycles
+        errs.append(abs(err))
+        row(f"fig6.model_vs_sim.n{n_unit}", cycles_us(sim.total_cycles),
+            f"model_err={err:+.1%}")
+    row("fig6.max_abs_err", 0.0, f"{max(errs):.1%} (paper: <10%)")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 7: latency split (data movement vs compute) across n_unit
+# ---------------------------------------------------------------------------
+
+def bench_latency_split(quick: bool) -> None:
+    wl = workloads.build_workload(
+        [workloads.VGG16_LAYERS[6]], n_samples=96 if quick else 160)
+    lw = wl[0]
+    model = CostModel()
+    for n_unit in (16, 64, 256, 1024, 4096):
+        b = model.breakdown(lw.stats, n_unit, lw.n_patches)
+        share = b.n_data_moves / (b.n_data_moves + b.n_compute)
+        row(f"fig7.split.n{n_unit}", cycles_us(b.n_total_pipelined),
+            f"dm_share={share:.0%} bound={b.bound}")
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 / §8.1: U-shaped design space + binary search
+# ---------------------------------------------------------------------------
+
+def bench_pareto_search(quick: bool) -> None:
+    wl = workloads.build_workload(
+        workloads.VGG16_LAYERS[:4] if quick else workloads.VGG16_LAYERS,
+        n_samples=96 if quick else 160)
+    layers = workloads.cost_model_layers(wl)
+    model = CostModel()
+    grid = [2 ** k for k in range(2, 13)]
+    swp = sweep(model, layers, grid)
+    res = binary_search(model, layers, n_unit_max=4096)
+    row("pareto.sweep_best", cycles_us(swp.best_cycles),
+        f"n_unit={swp.best_n_unit}")
+    row("pareto.binary_search", cycles_us(res.best_cycles),
+        f"n_unit={res.best_n_unit} probes={len(res.evaluations)}")
+
+
+# ---------------------------------------------------------------------------
+# Figs. 9/10: MAC vs XNOR vs NullaDSP, VGG16 + LeNet-5
+# ---------------------------------------------------------------------------
+
+def bench_nn_e2e(quick: bool) -> None:
+    """Figs. 9/10 on BOTH fabrics.
+
+    fpga (paper-faithful constants): reproduces the paper's headline —
+    NullaDSP at its Pareto-optimal unit count beats the (DDR-bound) MAC
+    array at 1024 units (paper VGG16: 2.99 ms vs 5.72 ms ~ 1.9x); XNOR is
+    fastest but least accurate.
+
+    tpu (hardware adaptation): on an HBM-class memory system the MAC
+    baseline is compute-bound and far stronger — the FFCL win shrinks.
+    Recorded as a finding in DESIGN.md §2 / EXPERIMENTS.md §Perf.
+    """
+    for fab_name, fabric in (("fpga", FpgaFabric()), ("tpu", TpuFabric())):
+        model = CostModel(fabric)
+        for net, layer_spec in (("vgg16", workloads.VGG16_LAYERS),
+                                ("lenet5", workloads.LENET5_LAYERS)):
+            spec = layer_spec[:4] if (quick and net == "vgg16") else \
+                layer_spec
+            wl = workloads.build_workload(spec,
+                                          n_samples=128 if quick else 400)
+            cls = workloads.cost_model_layers(wl)
+            us = 1e6 / fabric.clock_hz
+            units = (140, 512) if net == "lenet5" else (1024, 4096)
+            for n_unit in units:
+                mac = baselines.mac_cycles(spec, n_unit, fabric)
+                xnor = baselines.xnor_cycles(spec, n_unit, fabric)
+                nd = baselines.nulladsp_cycles(cls, n_unit, model)
+                row(f"fig9_10.{fab_name}.{net}.n{n_unit}.mac", mac * us, "")
+                row(f"fig9_10.{fab_name}.{net}.n{n_unit}.xnor", xnor * us, "")
+                row(f"fig9_10.{fab_name}.{net}.n{n_unit}.nulladsp", nd * us,
+                    f"vs_mac={mac / nd:.2f}x")
+            best = binary_search(model, cls, n_unit_max=4096)
+            mac1024 = baselines.mac_cycles(spec, 1024, fabric)
+            row(f"fig9_10.{fab_name}.{net}.pareto.nulladsp",
+                best.best_cycles * us,
+                f"n_unit={best.best_n_unit} "
+                f"vs_mac1024={mac1024 / best.best_cycles:.2f}x")
+            # eq. 25: k parallel compute kernels share the SAME unit budget
+            # as the MAC baseline — the paper's headline configuration
+            par_c, n_per, k = baselines.nulladsp_parallel_best(
+                cls, 1024, model)
+            row(f"fig9_10.{fab_name}.{net}.eq25.nulladsp", par_c * us,
+                f"{k}x{n_per}u vs_mac1024={mac1024 / par_c:.2f}x"
+                + (" (paper: ~1.9x vgg16)" if fab_name == "fpga" else ""))
+
+
+# ---------------------------------------------------------------------------
+# Table 4: resource utilization -> VMEM/HBM working sets per design size
+# ---------------------------------------------------------------------------
+
+def bench_resources(quick: bool) -> None:
+    wl = workloads.build_workload(
+        [workloads.VGG16_LAYERS[6]], n_samples=96 if quick else 160)
+    lw = wl[0]
+    w_words = -(-lw.n_patches // 32)
+    for label, n_unit in (("large", 1000), ("medium", 250), ("small", 180),
+                          ("tiny", 100)):
+        prog = compile_graph(lw.graph, n_unit=n_unit, alloc="liveness")
+        data_buf = prog.n_addr * w_words * 4
+        streams = prog.n_steps * prog.n_unit * (3 * 4 + 1)
+        row(f"table4.{label}.n{n_unit}", 0.0,
+            f"vmem_data={data_buf / 2 ** 10:.0f}KiB "
+            f"streams={streams / 2 ** 10:.0f}KiB steps={prog.n_steps}")
+
+
+# ---------------------------------------------------------------------------
+# kernel micro-benchmarks (wall-clock; interpret mode on CPU)
+# ---------------------------------------------------------------------------
+
+def bench_kernels(quick: bool) -> None:
+    import jax.numpy as jnp
+
+    from repro.kernels.logic_dsp import logic_infer_bits
+    from repro.kernels.xnor_gemm import xnor_gemm
+
+    rng = np.random.default_rng(0)
+    g = random_graph(rng, 32, 1500, 16, locality=128)
+    prog = compile_graph(g, n_unit=64, alloc="liveness")
+    X = rng.integers(0, 2, (4096, 32)).astype(bool)
+    logic_infer_bits(prog, X)                       # compile
+    t0 = time.perf_counter()
+    reps = 2 if quick else 5
+    for _ in range(reps):
+        logic_infer_bits(prog, X)
+    row("kernel.logic_dsp.interp", (time.perf_counter() - t0) / reps * 1e6,
+        f"gates={prog.n_gates} steps={prog.n_steps} batch=4096")
+
+    a = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
+    xnor_gemm(a, b).block_until_ready()
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        xnor_gemm(a, b).block_until_ready()
+    row("kernel.xnor_gemm.interp", (time.perf_counter() - t0) / reps * 1e6,
+        "m=n=256 k=2304")
+
+
+# ---------------------------------------------------------------------------
+# pipelining ablation (paper Fig. 8 a/b)
+# ---------------------------------------------------------------------------
+
+def bench_pipelining(quick: bool) -> None:
+    rng = np.random.default_rng(1)
+    g = random_graph(rng, 64, 3000, 32, locality=256)
+    progs = [compile_graph(g, n_unit=128)] * (8 if quick else 32)
+    pipe = simulate_pipeline(progs, n_input_vectors=4096)
+    seq = simulate_no_pipeline(progs, n_input_vectors=4096)
+    row("fig8.pipelined", cycles_us(pipe.total_cycles),
+        f"speedup={seq.total_cycles / pipe.total_cycles:.2f}x")
+    row("fig8.sequential", cycles_us(seq.total_cycles), "")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args, _ = ap.parse_known_args()
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    bench_cost_model_validation(args.quick)
+    bench_latency_split(args.quick)
+    bench_pareto_search(args.quick)
+    bench_nn_e2e(args.quick)
+    bench_resources(args.quick)
+    bench_pipelining(args.quick)
+    bench_kernels(args.quick)
+    print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,16 @@
+"""Batched serving demo: continuous batching over the decode engine.
+
+    PYTHONPATH=src python examples/serve_lm.py
+
+Thin wrapper over launch/serve.py defaults so `examples/` has a runnable
+serving scenario next to the training one.
+"""
+import sys
+
+from repro.launch import serve
+
+if __name__ == "__main__":
+    sys.argv = [sys.argv[0], "--arch", "qwen3-8b", "--smoke",
+                "--requests", "8", "--batch-size", "4",
+                "--prompt-len", "12", "--max-new", "6"] + sys.argv[1:]
+    serve.main()

@@ -1,0 +1,5 @@
+from repro.configs.registry import (ARCH_IDS, get_config, SHAPES,
+                                    cell_supported, input_specs, all_cells)
+
+__all__ = ["ARCH_IDS", "get_config", "SHAPES", "cell_supported",
+           "input_specs", "all_cells"]

@@ -1,0 +1,200 @@
+"""Gate-level IR for fixed-function combinational logic (FFCL) modules.
+
+The paper's compiler consumes a combinational netlist (Verilog), maps it to a
+2-input gate library supported by the compute units (DSP48 bitwise ALU ops),
+levelizes it, and schedules it. ``LogicGraph`` is that netlist: an int-indexed
+DAG in topological order.
+
+Wire numbering convention (matches the paper's Tables 2/3):
+  wire 0      -> constant 0   (paper: data-vector index 0 = 0x0000)
+  wire 1      -> constant 1   (paper: data-vector index 1 = 0xFFFF)
+  wires 2..   -> primary inputs, then gates in creation (topological) order
+"""
+from __future__ import annotations
+
+import enum
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+CONST0 = 0
+CONST1 = 1
+
+
+class OpCode(enum.IntEnum):
+    """Bitwise ops supported by a compute unit (paper §5: DSP48 logic unit)."""
+
+    NOP = 0    # no operation (paper's NOP padding in sub-kernels)
+    AND = 1
+    OR = 2
+    XOR = 3
+    NAND = 4
+    NOR = 5
+    XNOR = 6
+    NOT = 7    # unary: operand b ignored
+    COPY = 8   # unary passthrough: used for buffer moves
+
+
+# numpy-level semantics of each opcode on packed uint32/int32 words.
+_OP_FNS = {
+    OpCode.NOP: lambda a, b: a * 0,
+    OpCode.AND: lambda a, b: a & b,
+    OpCode.OR: lambda a, b: a | b,
+    OpCode.XOR: lambda a, b: a ^ b,
+    OpCode.NAND: lambda a, b: ~(a & b),
+    OpCode.NOR: lambda a, b: ~(a | b),
+    OpCode.XNOR: lambda a, b: ~(a ^ b),
+    OpCode.NOT: lambda a, b: ~a,
+    OpCode.COPY: lambda a, b: a,
+}
+
+COMMUTATIVE = {OpCode.AND, OpCode.OR, OpCode.XOR, OpCode.NAND, OpCode.NOR,
+               OpCode.XNOR}
+UNARY = {OpCode.NOT, OpCode.COPY}
+# (op, a==b) -> result expressed as ('wire', operand) or ('const', 0/1) or None
+ASSOCIATIVE = {OpCode.AND, OpCode.OR, OpCode.XOR}
+
+
+def apply_op(op: int, a, b):
+    """Apply opcode ``op`` bitwise to packed words ``a``, ``b`` (numpy)."""
+    return _OP_FNS[OpCode(op)](a, b)
+
+
+@dataclass
+class LogicGraph:
+    """A combinational netlist over a 2-input gate library.
+
+    ``gates[i] = (opcode, src_a, src_b)`` produces wire ``first_gate_wire + i``.
+    Wires 0/1 are constants; wires 2..2+n_inputs-1 are primary inputs.
+    """
+
+    n_inputs: int
+    gates: list[tuple[int, int, int]] = field(default_factory=list)
+    outputs: list[int] = field(default_factory=list)
+    name: str = "ffcl"
+
+    # ---- structure ----
+    @property
+    def first_gate_wire(self) -> int:
+        return 2 + self.n_inputs
+
+    @property
+    def n_gates(self) -> int:
+        return len(self.gates)
+
+    @property
+    def n_wires(self) -> int:
+        return 2 + self.n_inputs + self.n_gates
+
+    @property
+    def n_outputs(self) -> int:
+        return len(self.outputs)
+
+    def input_wire(self, i: int) -> int:
+        if not 0 <= i < self.n_inputs:
+            raise IndexError(f"input {i} out of range ({self.n_inputs})")
+        return 2 + i
+
+    def input_wires(self) -> list[int]:
+        return list(range(2, 2 + self.n_inputs))
+
+    def gate_of_wire(self, wire: int) -> tuple[int, int, int]:
+        return self.gates[wire - self.first_gate_wire]
+
+    def is_gate(self, wire: int) -> bool:
+        return wire >= self.first_gate_wire
+
+    # ---- construction ----
+    def add_gate(self, op: OpCode | int, a: int, b: int = CONST0) -> int:
+        """Append a gate; operands must already exist (topological order)."""
+        op = OpCode(op)
+        wire = self.n_wires
+        if not (0 <= a < wire) or not (0 <= b < wire):
+            raise ValueError(
+                f"gate operands ({a},{b}) must precede wire {wire}")
+        self.gates.append((int(op), a, b))
+        return wire
+
+    def set_outputs(self, outs: Iterable[int]) -> None:
+        outs = list(outs)
+        for o in outs:
+            if not 0 <= o < self.n_wires:
+                raise ValueError(f"output wire {o} does not exist")
+        self.outputs = outs
+
+    # ---- evaluation (the pure-python/numpy oracle for everything above) ----
+    def evaluate(self, inputs: np.ndarray) -> np.ndarray:
+        """Evaluate on a batch of boolean inputs.
+
+        Args:
+          inputs: bool/int array (batch, n_inputs).
+        Returns:
+          bool array (batch, n_outputs).
+        """
+        inputs = np.asarray(inputs)
+        if inputs.ndim != 2 or inputs.shape[1] != self.n_inputs:
+            raise ValueError(
+                f"inputs must be (batch, {self.n_inputs}), got {inputs.shape}")
+        batch = inputs.shape[0]
+        vals = np.zeros((self.n_wires, batch), dtype=np.uint8)
+        vals[CONST1] = 1
+        vals[2:2 + self.n_inputs] = inputs.astype(np.uint8).T
+        base = self.first_gate_wire
+        for i, (op, a, b) in enumerate(self.gates):
+            r = apply_op(op, vals[a].astype(np.int64), vals[b].astype(np.int64))
+            vals[base + i] = (r & 1).astype(np.uint8)
+        return vals[self.outputs].T.astype(bool)
+
+    # ---- analysis ----
+    def fanout_counts(self) -> np.ndarray:
+        fo = np.zeros(self.n_wires, dtype=np.int64)
+        for op, a, b in self.gates:
+            fo[a] += 1
+            if OpCode(op) not in UNARY:
+                fo[b] += 1
+        for o in self.outputs:
+            fo[o] += 1
+        return fo
+
+    def stats(self) -> dict:
+        from repro.core.levelize import levelize  # local import, no cycle
+        lv = levelize(self)
+        return {
+            "name": self.name,
+            "n_inputs": self.n_inputs,
+            "n_outputs": self.n_outputs,
+            "n_gates": self.n_gates,
+            "depth": int(lv.depth),
+        }
+
+    def copy(self) -> "LogicGraph":
+        return LogicGraph(self.n_inputs, list(self.gates),
+                          list(self.outputs), self.name)
+
+
+# ---------------------------------------------------------------------------
+# Random graph generator (tests / benchmarks): well-formed DAGs with
+# controllable size/shape, mirroring NullaNet-style FFCL statistics.
+# ---------------------------------------------------------------------------
+
+def random_graph(rng: np.random.Generator, n_inputs: int, n_gates: int,
+                 n_outputs: int, unary_frac: float = 0.1,
+                 locality: int = 64) -> LogicGraph:
+    """Random topological DAG; operands biased toward recent wires."""
+    g = LogicGraph(n_inputs=n_inputs, name="random")
+    binary_ops = [OpCode.AND, OpCode.OR, OpCode.XOR, OpCode.NAND, OpCode.NOR,
+                  OpCode.XNOR]
+    for _ in range(n_gates):
+        hi = g.n_wires
+        lo = max(0, hi - locality)
+        a = int(rng.integers(lo, hi))
+        if rng.random() < unary_frac:
+            g.add_gate(OpCode.NOT, a)
+        else:
+            b = int(rng.integers(lo, hi))
+            g.add_gate(rng.choice(binary_ops), a, b)
+    n_outputs = min(n_outputs, g.n_wires - 2)
+    outs = rng.choice(np.arange(2, g.n_wires), size=n_outputs, replace=False)
+    g.set_outputs(int(o) for o in outs)
+    return g

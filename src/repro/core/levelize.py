@@ -1,0 +1,45 @@
+"""Levelization (paper §6.1, eq. 1): l_i = 1 + max_{j in fanin(i)} l_j.
+
+Gates at the same logic level have no connections to each other, so their
+operations can execute simultaneously on the compute units. Levelization is
+the scheduling skeleton: each level becomes >=1 sub-kernels (scheduler.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.gate_ir import LogicGraph
+
+
+@dataclass(frozen=True)
+class Levelization:
+    """Per-wire logic levels plus per-level gate lists."""
+
+    levels: np.ndarray          # (n_wires,) int64; consts/inputs are level 0
+    depth: int                  # max level over all gates (0 if no gates)
+    level_gates: list[np.ndarray]  # level l (1-based) -> gate indices at l
+
+    def gates_at(self, level: int) -> np.ndarray:
+        """Gate indices (into graph.gates) at logic level ``level`` (>=1)."""
+        return self.level_gates[level - 1]
+
+    def histogram(self) -> np.ndarray:
+        """Number of gates per level, shape (depth,)."""
+        return np.array([len(g) for g in self.level_gates], dtype=np.int64)
+
+
+def levelize(graph: LogicGraph) -> Levelization:
+    """Single topological pass (graph.gates is already in topo order)."""
+    n = graph.n_wires
+    levels = np.zeros(n, dtype=np.int64)
+    base = graph.first_gate_wire
+    for i, (op, a, b) in enumerate(graph.gates):
+        levels[base + i] = 1 + max(levels[a], levels[b])
+    depth = int(levels.max()) if graph.n_gates else 0
+    buckets: list[list[int]] = [[] for _ in range(depth)]
+    for i in range(graph.n_gates):
+        buckets[levels[base + i] - 1].append(i)
+    level_gates = [np.asarray(b, dtype=np.int64) for b in buckets]
+    return Levelization(levels=levels, depth=depth, level_gates=level_gates)

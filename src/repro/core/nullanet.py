@@ -1,0 +1,201 @@
+"""NullaNet flow (paper §7): binarized NN -> per-neuron Boolean functions.
+
+Pipeline (faithful to [Nazemi et al. 2019] / NullaNet Tiny as summarized in
+the paper): train a DNN with binary activations; per neuron, form a Boolean
+specification either by *input enumeration* (fanin <= ``ENUM_LIMIT``) or as
+an *incompletely specified function* (ISF) sampled on the training set; run
+two-level minimization; factor into 2-input gates -> LogicGraph -> the FFCL
+compiler (scheduler.py). First/last layers stay full-precision (paper §8.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import espresso
+from repro.core.gate_ir import LogicGraph
+from repro.core.synth import optimize
+from repro.optim import adamw_init, adamw_update
+
+ENUM_LIMIT = 14  # paper §7.1: enumeration applicable to <= ~14 inputs
+
+
+# ---------------------------------------------------------------------------
+# Binarized MLP (training substrate)
+# ---------------------------------------------------------------------------
+
+def _ste_sign01(y: jnp.ndarray) -> jnp.ndarray:
+    """Binary {0,1} activation with tanh straight-through gradient."""
+    soft = 0.5 * (jnp.tanh(y) + 1.0)
+    hard = (y >= 0).astype(jnp.float32)
+    return soft + jax.lax.stop_gradient(hard - soft)
+
+
+@dataclass(frozen=True)
+class BinaryMLPConfig:
+    n_features: int
+    hidden: tuple[int, ...]
+    n_classes: int
+    seed: int = 0
+
+
+def init_binary_mlp(cfg: BinaryMLPConfig) -> dict:
+    rng = np.random.default_rng(cfg.seed)
+    sizes = [cfg.n_features, *cfg.hidden, cfg.n_classes]
+    params = {}
+    for i, (fin, fout) in enumerate(zip(sizes[:-1], sizes[1:])):
+        params[f"w{i}"] = jnp.asarray(
+            rng.normal(0, (2.0 / fin) ** 0.5, size=(fin, fout)),
+            dtype=jnp.float32)
+        params[f"b{i}"] = jnp.zeros((fout,), jnp.float32)
+    return params
+
+
+def binary_mlp_forward(params: dict, x01: jnp.ndarray, n_layers: int,
+                       return_activations: bool = False):
+    """x01: {0,1} features. Hidden activations binarized; last layer linear."""
+    acts = [x01]
+    h = 2.0 * x01.astype(jnp.float32) - 1.0   # +-1 encoding into the matmul
+    for i in range(n_layers - 1):
+        y = h @ params[f"w{i}"] + params[f"b{i}"]
+        a01 = _ste_sign01(y)
+        acts.append(a01)
+        h = 2.0 * a01 - 1.0
+    logits = h @ params[f"w{n_layers - 1}"] + params[f"b{n_layers - 1}"]
+    if return_activations:
+        return logits, acts
+    return logits
+
+
+def train_binary_mlp(cfg: BinaryMLPConfig, x: np.ndarray, y: np.ndarray,
+                     steps: int = 300, batch: int = 256, lr: float = 2e-3,
+                     log_every: int = 0) -> dict:
+    n_layers = len(cfg.hidden) + 1
+    params = init_binary_mlp(cfg)
+    state = adamw_init(params)
+    x = jnp.asarray(x, jnp.float32)
+    y = jnp.asarray(y, jnp.int32)
+
+    def loss_fn(p, xb, yb):
+        logits = binary_mlp_forward(p, xb, n_layers)
+        logp = jax.nn.log_softmax(logits)
+        return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
+
+    @jax.jit
+    def step_fn(p, s, xb, yb):
+        loss, grads = jax.value_and_grad(loss_fn)(p, xb, yb)
+        p, s = adamw_update(grads, s, p, lr=lr, weight_decay=0.0)
+        return p, s, loss
+
+    rng = np.random.default_rng(cfg.seed + 1)
+    for t in range(steps):
+        idx = rng.integers(0, x.shape[0], size=batch)
+        params, state, loss = step_fn(params, state, x[idx], y[idx])
+        if log_every and t % log_every == 0:
+            print(f"step {t}: loss {float(loss):.4f}")
+    return params
+
+
+def mlp_accuracy(params: dict, cfg: BinaryMLPConfig, x: np.ndarray,
+                 y: np.ndarray) -> float:
+    n_layers = len(cfg.hidden) + 1
+    logits = binary_mlp_forward(params, jnp.asarray(x, jnp.float32), n_layers)
+    return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
+
+
+# ---------------------------------------------------------------------------
+# Boolean specification extraction
+# ---------------------------------------------------------------------------
+
+def neuron_isf(x_bits: np.ndarray, w: np.ndarray, b: float
+               ) -> tuple[np.ndarray, np.ndarray]:
+    """ISF of one neuron sampled on observed inputs (paper §7.1).
+
+    x_bits: (N, fanin) {0,1}. Neuron fires iff (2x-1)@w + b >= 0.
+    Returns deduplicated (X_on, X_off) minterm arrays.
+    """
+    x_bits = np.asarray(x_bits, dtype=np.uint8)
+    acts = ((2.0 * x_bits - 1.0) @ np.asarray(w) + b) >= 0
+    pats, idx = np.unique(x_bits, axis=0, return_index=True)
+    out = acts[idx]
+    return pats[out], pats[~out]
+
+
+def neuron_enumerated(w: np.ndarray, b: float) -> tuple[np.ndarray, np.ndarray]:
+    """Complete truth table by input enumeration (fanin <= ENUM_LIMIT)."""
+    fanin = len(w)
+    if fanin > ENUM_LIMIT:
+        raise ValueError(f"enumeration limited to {ENUM_LIMIT} inputs")
+    pats = ((np.arange(2 ** fanin)[:, None] >>
+             np.arange(fanin)[None, :]) & 1).astype(np.uint8)
+    acts = ((2.0 * pats - 1.0) @ np.asarray(w) + b) >= 0
+    return pats[acts], pats[~acts]
+
+
+def layer_to_graph(x_bits: np.ndarray, W: np.ndarray, b: np.ndarray,
+                   mode: str = "auto", name: str = "layer",
+                   run_synth: bool = True) -> LogicGraph:
+    """Convert one binarized layer (all neurons, shared inputs) to a graph.
+
+    mode: 'isf' | 'enum' | 'auto' (enum when fanin <= ENUM_LIMIT).
+    """
+    fanin, n_neurons = W.shape
+    if mode == "auto":
+        mode = "enum" if fanin <= ENUM_LIMIT else "isf"
+    cube_sets = []
+    for j in range(n_neurons):
+        if mode == "enum":
+            x_on, x_off = neuron_enumerated(W[:, j], float(b[j]))
+        else:
+            x_on, x_off = neuron_isf(x_bits, W[:, j], float(b[j]))
+        cubes = espresso.minimize(x_on, x_off)
+        assert espresso.check_cover(cubes, x_on, x_off), \
+            f"minimization broke neuron {j}"
+        cube_sets.append(cubes)
+    graph = espresso.sop_to_graph(cube_sets, n_inputs=fanin, name=name)
+    return optimize(graph) if run_synth else graph
+
+
+# ---------------------------------------------------------------------------
+# End-to-end logic network
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LogicNetwork:
+    """Hidden layers as FFCL graphs + full-precision output head."""
+
+    graphs: list[LogicGraph]
+    w_out: np.ndarray
+    b_out: np.ndarray
+
+    def predict(self, x_bits: np.ndarray, executor=None) -> np.ndarray:
+        """executor(graph, bits)->bits; defaults to LogicGraph.evaluate."""
+        h = np.asarray(x_bits, dtype=np.uint8)
+        for g in self.graphs:
+            run = executor or (lambda gr, xb: gr.evaluate(xb))
+            h = run(g, h.astype(bool)).astype(np.uint8)
+        logits = (2.0 * h - 1.0) @ self.w_out + self.b_out
+        return np.argmax(logits, axis=-1)
+
+
+def mlp_to_logic_network(params: dict, cfg: BinaryMLPConfig, x: np.ndarray,
+                         mode: str = "auto") -> LogicNetwork:
+    """Full NullaNet conversion of the hidden stack of a trained MLP."""
+    n_layers = len(cfg.hidden) + 1
+    _, acts = binary_mlp_forward(
+        params, jnp.asarray(x, jnp.float32), n_layers,
+        return_activations=True)
+    acts = [np.asarray(a).astype(np.uint8) for a in acts]
+    graphs = []
+    for i in range(n_layers - 1):
+        W = np.asarray(params[f"w{i}"])
+        b = np.asarray(params[f"b{i}"])
+        graphs.append(layer_to_graph(acts[i], W, b, mode=mode,
+                                     name=f"layer{i}"))
+    return LogicNetwork(graphs=graphs,
+                        w_out=np.asarray(params[f"w{n_layers - 1}"]),
+                        b_out=np.asarray(params[f"b{n_layers - 1}"]))

@@ -1,0 +1,64 @@
+"""Design-space exploration over the number of compute units (paper §7.2).
+
+Latency vs n_unit is U-shaped (paper Fig. 6): more units shrink the compute
+term (fewer sub-kernel steps) but grow the address-stream data-movement term
+(3 addresses per unit per step, and padding waste). Eq. 26 minimizes total
+cycles subject to n_unit <= N_max via binary search; we implement the same
+search (on the discrete derivative) plus an exhaustive sweep for plots.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, FfclStats
+
+
+@dataclass
+class SearchResult:
+    best_n_unit: int
+    best_cycles: float
+    evaluations: list[tuple[int, float]]   # (n_unit, cycles) probes, in order
+
+
+def _network_cost(model: CostModel,
+                  layers: list[tuple[FfclStats, int, int]],
+                  n_unit: int, parallel_factor: int = 1) -> float:
+    return model.network_cycles(layers, n_unit, parallel_factor)
+
+
+def sweep(model: CostModel, layers: list[tuple[FfclStats, int, int]],
+          n_units: list[int], parallel_factor: int = 1) -> SearchResult:
+    evals = [(u, _network_cost(model, layers, u, parallel_factor))
+             for u in n_units]
+    best = min(evals, key=lambda t: t[1])
+    return SearchResult(best[0], best[1], evals)
+
+
+def binary_search(model: CostModel, layers: list[tuple[FfclStats, int, int]],
+                  n_unit_max: int, parallel_factor: int = 1,
+                  n_unit_min: int = 1) -> SearchResult:
+    """Binary search on the sign of the discrete derivative (paper §8.1).
+
+    Assumes unimodal latency in n_unit (holds for the model: the compute
+    term is ~1/n decreasing + ceil-steps, the address term is increasing).
+    """
+    evals: list[tuple[int, float]] = []
+
+    def cost(u: int) -> float:
+        c = _network_cost(model, layers, u, parallel_factor)
+        evals.append((u, c))
+        return c
+
+    lo, hi = n_unit_min, n_unit_max
+    while hi - lo > 2:
+        mid = (lo + hi) // 2
+        if cost(mid) <= cost(mid + 1):
+            hi = mid + 1       # minimum is at mid or left of it
+        else:
+            lo = mid + 1
+    cand = {u: _network_cost(model, layers, u, parallel_factor)
+            for u in range(lo, hi + 1)}
+    best_u = min(cand, key=cand.get)
+    return SearchResult(best_u, cand[best_u], evals)

@@ -1,0 +1,45 @@
+"""Batch bit-packing (paper §5: 48-lane DSP SIMD -> 32-lane int32 words).
+
+The DSP48 executes one opcode over 48 independent Boolean lanes; on TPU the
+natural word is int32 on the VPU, so we pack 32 *samples* per word and keep a
+word (lane) axis of width W = ceil(batch/32). A gate op on a (row, W) slab
+processes 32*W samples in one VPU op row.
+
+Layout: ``packed[w, j]`` bit ``k`` (LSB-first) = ``bits[j*32 + k, w]``.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+WORD_BITS = 32
+
+
+def packed_width(batch: int) -> int:
+    return -(-batch // WORD_BITS)
+
+
+def pack_bits(bits: np.ndarray) -> np.ndarray:
+    """(batch, n_wires) bool -> (n_wires, W) int32, LSB-first within a word."""
+    bits = np.asarray(bits).astype(np.uint8)
+    batch, n = bits.shape
+    w = packed_width(batch)
+    pad = w * WORD_BITS - batch
+    if pad:
+        bits = np.concatenate(
+            [bits, np.zeros((pad, n), dtype=np.uint8)], axis=0)
+    # (W, 32, n) -> pack along the 32 axis
+    chunks = bits.reshape(w, WORD_BITS, n)
+    weights = (np.uint32(1) << np.arange(WORD_BITS, dtype=np.uint32))
+    words = (chunks.astype(np.uint32) * weights[None, :, None]).sum(
+        axis=1, dtype=np.uint32)
+    return words.astype(np.int32).T.copy()  # (n, W)
+
+
+def unpack_bits(words: np.ndarray, batch: int) -> np.ndarray:
+    """(n_wires, W) int32 -> (batch, n_wires) bool."""
+    words = np.asarray(words).astype(np.uint32)
+    n, w = words.shape
+    shifts = np.arange(WORD_BITS, dtype=np.uint32)
+    bits = (words[:, :, None] >> shifts[None, None, :]) & np.uint32(1)
+    bits = bits.reshape(n, w * WORD_BITS).T  # (W*32, n)
+    return bits[:batch].astype(bool)

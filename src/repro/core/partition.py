@@ -1,0 +1,147 @@
+"""FFCL graph partitioning: split modules that exceed the on-chip budget.
+
+The paper's §2 closes with: "by leveraging a hybrid implementation, i.e.,
+mapping some FFCL modules to LUTs and others to DSPs, a high-performance
+inference engine for ANY network on ANY FPGA device can be achieved." The
+TPU analogue of the resource wall is the VMEM data buffer: a compiled
+program needs `n_addr x W x 4` bytes resident; graphs from wide NullaNet
+layers can exceed the per-core budget.
+
+``partition(graph, max_outputs | budget)`` splits a multi-output FFCL into
+sub-FFCLs by *output-cone clustering*: each output's transitive fanin cone
+is computed, and outputs are greedily packed into clusters that maximize
+cone overlap (shared gates are deduplicated inside a cluster but duplicated
+across clusters — the classic area/latency trade the paper's LUT/DSP hybrid
+makes). The resulting modules execute back-to-back on the same fabric with
+task pipelining (simulator.py), exactly like the paper's multi-FFCL flow.
+
+``execute_partitions`` re-assembles the full output vector and is tested
+for exact equivalence against the unpartitioned graph.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, UNARY
+from repro.core.scheduler import LogicProgram, compile_graph
+
+
+def output_cones(graph: LogicGraph) -> list[set]:
+    """Transitive-fanin gate set (wire ids) per output."""
+    memo: dict[int, frozenset] = {}
+
+    def cone(w: int) -> frozenset:
+        if w in memo:
+            return memo[w]
+        if not graph.is_gate(w):
+            memo[w] = frozenset()
+            return memo[w]
+        op, a, b = graph.gate_of_wire(w)
+        s = {w} | set(cone(a))
+        if OpCode(op) not in UNARY:
+            s |= set(cone(b))
+        memo[w] = frozenset(s)
+        return memo[w]
+
+    # iterative bottom-up to avoid recursion limits on deep graphs
+    base = graph.first_gate_wire
+    for i in range(graph.n_gates):
+        w = base + i
+        op, a, b = graph.gates[i]
+        s = {w} | set(memo.get(a, frozenset()))
+        if OpCode(op) not in UNARY:
+            s |= set(memo.get(b, frozenset()))
+        memo[w] = frozenset(s)
+    return [set(memo.get(o, frozenset())) for o in graph.outputs]
+
+
+@dataclass(frozen=True)
+class Partition:
+    graph: LogicGraph           # sub-FFCL (inputs = original inputs)
+    output_indices: list        # positions in the original output vector
+
+
+def _extract(graph: LogicGraph, out_idx: list[int]) -> LogicGraph:
+    """Sub-graph computing the given outputs (gates outside the union of
+    their cones dropped, topological order preserved)."""
+    keep_outputs = [graph.outputs[i] for i in out_idx]
+    live = set(keep_outputs)
+    base = graph.first_gate_wire
+    for i in range(graph.n_gates - 1, -1, -1):
+        w = base + i
+        if w in live:
+            op, a, b = graph.gates[i]
+            live.add(a)
+            if OpCode(op) not in UNARY:
+                live.add(b)
+    sub = LogicGraph(graph.n_inputs, name=f"{graph.name}.part")
+    repl = {CONST0: CONST0, CONST1: CONST1}
+    for i in range(graph.n_inputs):
+        repl[2 + i] = 2 + i
+    for i in range(graph.n_gates):
+        w = base + i
+        if w in live:
+            op, a, b = graph.gates[i]
+            repl[w] = sub.add_gate(OpCode(op), repl[a], repl.get(b, CONST0))
+    sub.set_outputs(repl[o] for o in keep_outputs)
+    return sub
+
+
+def partition(graph: LogicGraph, max_gates: int,
+              ) -> list[Partition]:
+    """Greedy cone-overlap clustering under a per-partition gate budget.
+
+    Each cluster's gate set is the union of its members' cones; a new
+    output joins the cluster where it adds the fewest NEW gates, if the
+    union stays <= max_gates; otherwise it seeds a new cluster.
+    """
+    if graph.n_outputs == 0:
+        return []
+    cones = output_cones(graph)
+    order = np.argsort([-len(c) for c in cones], kind="stable")
+    clusters: list[tuple[set, list]] = []   # (gate union, output indices)
+    for oi in order:
+        oi = int(oi)
+        cone = cones[oi]
+        best, best_new = None, None
+        for ci, (union, members) in enumerate(clusters):
+            new = len(cone - union)
+            if len(union) + new <= max_gates and \
+                    (best_new is None or new < best_new):
+                best, best_new = ci, new
+        if best is None:
+            clusters.append((set(cone), [oi]))
+        else:
+            clusters[best][0].update(cone)
+            clusters[best][1].append(oi)
+    return [Partition(graph=_extract(graph, members), output_indices=members)
+            for _, members in clusters]
+
+
+def compile_partitions(parts: list[Partition], n_unit: int,
+                       alloc: str = "liveness") -> list[LogicProgram]:
+    return [compile_graph(p.graph, n_unit=n_unit, alloc=alloc)
+            for p in parts]
+
+
+def execute_partitions(parts: list[Partition], inputs: np.ndarray,
+                       executor=None) -> np.ndarray:
+    """Run every sub-FFCL and reassemble the original output order."""
+    n_out = sum(len(p.output_indices) for p in parts)
+    out = np.zeros((inputs.shape[0], n_out), dtype=bool)
+    for p in parts:
+        run = executor or (lambda g, x: g.evaluate(x))
+        sub_out = run(p.graph, inputs)
+        for j, oi in enumerate(p.output_indices):
+            out[:, oi] = sub_out[:, j]
+    return out
+
+
+def duplication_factor(graph: LogicGraph, parts: list[Partition]) -> float:
+    """Total gates across partitions / original gates (the area cost of
+    the split; the latency gain comes from pipelining + smaller buffers)."""
+    if graph.n_gates == 0:
+        return 1.0
+    return sum(p.graph.n_gates for p in parts) / graph.n_gates

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (make_binary_classification, TokenPipeline,
+                                  synthetic_tokens)
+
+__all__ = ["make_binary_classification", "TokenPipeline", "synthetic_tokens"]

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: the "DSP fabric" — levelized gate-program executor.
+
+Maps the paper's hardware architecture (Fig. 3) onto a TPU core:
+
+  BRAM data buffer     -> VMEM scratch ``buf`` (n_addr rows x Wb lanes int32)
+  Addr./Opcode buffers -> program streams (n_steps, n_unit), VMEM-resident
+                          (replicated across grid steps via a 0-index map)
+  DSP registers        -> VREG slabs: per step, gather 2x(n_unit, Wb) operand
+                          slabs, apply the opcode-selected bitwise op, scatter
+                          (n_unit, Wb) results
+  48-lane DSP SIMD     -> 32 samples/int32 x Wb lanes per row
+  URAM double buffer   -> the Pallas grid pipeline: while block g computes,
+                          Mosaic DMAs block g+1's input slab HBM->VMEM
+                          (paper §5.2.2/§5.2.3 made structural)
+
+Grid: one dimension over batch-word blocks (Wb = 128 lanes each). The whole
+program executes per block; blocks are independent (batch parallelism), so
+the paper's "multiple parallel accelerators" (§5.2.4) appear as grid steps
+here and as shard_map shards across chips.
+
+TARGET is TPU; correctness is validated in interpret mode (CPU container).
+The dynamic row gather/scatter (jnp.take / .at[].set on the VMEM-resident
+value) is the Mosaic-side requirement; tiling keeps every slab (8,128)-
+aligned: n_unit is padded to a multiple of 8, Wb = 128.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.kernels.logic_dsp.ref import apply_opcode_jnp
+
+LANE = 128      # lane tile (int32)
+SUBLANE = 8     # sublane tile
+
+
+def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref, inputs_ref,
+                  out_addrs_ref, out_ref, *, n_addr: int):
+    """One grid step: run the full program over one batch-word block."""
+    wb = inputs_ref.shape[1]
+    n_steps = src_a_ref.shape[0]
+
+    buf = jnp.zeros((n_addr, wb), jnp.int32)
+    buf = buf.at[1, :].set(jnp.int32(-1))                    # const-1 row
+    buf = jax.lax.dynamic_update_slice(buf, inputs_ref[...], (2, 0))
+
+    def step(s, buf):
+        idx_a = src_a_ref[s]                                  # (n_unit,)
+        idx_b = src_b_ref[s]
+        a = jnp.take(buf, idx_a, axis=0)                      # (n_unit, Wb)
+        b = jnp.take(buf, idx_b, axis=0)
+        r = apply_opcode_jnp(opcode_ref[s][:, None], a, b)
+        return buf.at[dst_ref[s]].set(r)
+
+    buf = jax.lax.fori_loop(0, n_steps, step, buf)
+    out_ref[...] = jnp.take(buf, out_addrs_ref[...], axis=0)
+
+
+@functools.partial(jax.jit, static_argnames=("n_addr", "block_w", "interpret"))
+def logic_pallas_call(src_a, src_b, dst, opcode, input_words, output_addrs,
+                      *, n_addr: int, block_w: int = LANE,
+                      interpret: bool = True):
+    """Launch the kernel over ceil(W / block_w) batch-word blocks.
+
+    Args:
+      src_a/src_b/dst/opcode: (n_steps, n_unit) int32 (n_unit % 8 == 0
+        recommended for sublane alignment; scheduler pads with NOPs).
+      input_words: (n_inputs, W) int32; W padded to block_w by the caller.
+      output_addrs: (n_outputs,) int32.
+    Returns:
+      (n_outputs, W) int32.
+    """
+    n_inputs, w = input_words.shape
+    n_outputs = output_addrs.shape[0]
+    if w % block_w:
+        raise ValueError(f"W={w} must be a multiple of block_w={block_w}")
+    grid = (w // block_w,)
+
+    prog_spec = lambda arr: pl.BlockSpec(arr.shape, lambda g: (0, 0))
+    return pl.pallas_call(
+        functools.partial(_logic_kernel, n_addr=n_addr),
+        grid=grid,
+        in_specs=[
+            prog_spec(src_a), prog_spec(src_b), prog_spec(dst),
+            prog_spec(opcode),
+            pl.BlockSpec((n_inputs, block_w), lambda g: (0, g)),
+            pl.BlockSpec((n_outputs,), lambda g: (0,)),
+        ],
+        out_specs=pl.BlockSpec((n_outputs, block_w), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((n_outputs, w), jnp.int32),
+        interpret=interpret,
+    )(src_a, src_b, dst, opcode, input_words, output_addrs)

@@ -1,0 +1,88 @@
+"""Jit'd public API over the logic_dsp kernel + jnp bit packing."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.scheduler import LogicProgram
+from repro.kernels.logic_dsp import kernel as _k
+from repro.kernels.logic_dsp.ref import logic_forward_ref
+
+WORD_BITS = 32
+
+
+def pack_bits_jnp(bits: jnp.ndarray) -> jnp.ndarray:
+    """(batch, n) bool -> (n, ceil(batch/32)) int32 (LSB-first), jit-safe."""
+    batch, n = bits.shape
+    w = -(-batch // WORD_BITS)
+    pad = w * WORD_BITS - batch
+    b = jnp.pad(bits.astype(jnp.uint32), ((0, pad), (0, 0)))
+    chunks = b.reshape(w, WORD_BITS, n)
+    weights = (jnp.uint32(1) << jnp.arange(WORD_BITS, dtype=jnp.uint32))
+    words = (chunks * weights[None, :, None]).sum(axis=1, dtype=jnp.uint32)
+    return words.astype(jnp.int32).T
+
+
+def unpack_bits_jnp(words: jnp.ndarray, batch: int) -> jnp.ndarray:
+    """(n, W) int32 -> (batch, n) bool."""
+    n, w = words.shape
+    shifts = jnp.arange(WORD_BITS, dtype=jnp.uint32)
+    bits = (words.astype(jnp.uint32)[:, :, None] >> shifts) & jnp.uint32(1)
+    return bits.reshape(n, w * WORD_BITS).T[:batch].astype(bool)
+
+
+def _pad_words(words: jnp.ndarray, block_w: int) -> jnp.ndarray:
+    w = words.shape[1]
+    pad = (-w) % block_w
+    if pad:
+        words = jnp.pad(words, ((0, 0), (0, pad)))
+    return words
+
+
+def program_arrays(prog: LogicProgram, pad_unit: int = 8) -> dict:
+    """Program streams as device arrays, n_unit padded to sublane multiple."""
+    pad = (-prog.n_unit) % pad_unit
+
+    def p(a, fill):
+        a = np.asarray(a, dtype=np.int32)
+        if pad:
+            a = np.pad(a, ((0, 0), (0, pad)), constant_values=fill)
+        return jnp.asarray(a)
+
+    return {
+        "src_a": p(prog.src_a, 0), "src_b": p(prog.src_b, 0),
+        "dst": p(prog.dst, prog.trash_addr), "opcode": p(prog.opcode, 0),
+        "output_addrs": jnp.asarray(prog.output_addrs, dtype=jnp.int32),
+        "n_addr": prog.n_addr,
+    }
+
+
+def logic_forward(prog: LogicProgram, input_words: jnp.ndarray,
+                  block_w: int = _k.LANE, interpret: bool = True,
+                  use_ref: bool = False) -> jnp.ndarray:
+    """Packed-word forward: (n_inputs, W) int32 -> (n_outputs, W) int32."""
+    arrs = program_arrays(prog)
+    w = input_words.shape[1]
+    if use_ref:
+        return logic_forward_ref(
+            arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
+            input_words, arrs["output_addrs"], arrs["n_addr"])
+    padded = _pad_words(input_words, block_w)
+    out = _k.logic_pallas_call(
+        arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
+        padded, arrs["output_addrs"],
+        n_addr=arrs["n_addr"], block_w=block_w, interpret=interpret)
+    return out[:, :w]
+
+
+def logic_infer_bits(prog: LogicProgram, bits: np.ndarray | jnp.ndarray,
+                     **kw) -> np.ndarray:
+    """Boolean convenience wrapper: (batch, n_inputs) -> (batch, n_outputs)."""
+    bits = jnp.asarray(bits, dtype=bool)
+    batch = bits.shape[0]
+    words = pack_bits_jnp(bits)
+    out = logic_forward(prog, words, **kw)
+    return np.asarray(unpack_bits_jnp(out, batch))

@@ -1,0 +1,59 @@
+"""Pure-jnp oracle for the logic_dsp kernel.
+
+Semantics contract (identical to ``scheduler.execute_program_np``): a data
+buffer of ``n_addr`` int32 rows; row 0 = const0, row 1 = const1 (all ones),
+rows 2..2+n_inputs hold the packed primary inputs; per sub-kernel step,
+unit u computes ``opcode[s,u]`` over rows ``src_a[s,u]``/``src_b[s,u]`` and
+writes row ``dst[s,u]`` (NOPs write a trash row). Outputs are gathered from
+``output_addrs`` at the end.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def apply_opcode_jnp(op: jnp.ndarray, a: jnp.ndarray,
+                     b: jnp.ndarray) -> jnp.ndarray:
+    """Vectorized opcode dispatch; ``op`` broadcasts against a/b (int32)."""
+    ones = jnp.int32(-1)
+    r = jnp.zeros_like(a)                                   # NOP = 0
+    r = jnp.where(op == 1, a & b, r)                        # AND
+    r = jnp.where(op == 2, a | b, r)                        # OR
+    r = jnp.where(op == 3, a ^ b, r)                        # XOR
+    r = jnp.where(op == 4, (a & b) ^ ones, r)               # NAND
+    r = jnp.where(op == 5, (a | b) ^ ones, r)               # NOR
+    r = jnp.where(op == 6, (a ^ b) ^ ones, r)               # XNOR
+    r = jnp.where(op == 7, a ^ ones, r)                     # NOT
+    r = jnp.where(op == 8, a, r)                            # COPY
+    return r
+
+
+def logic_forward_ref(src_a: jnp.ndarray, src_b: jnp.ndarray,
+                      dst: jnp.ndarray, opcode: jnp.ndarray,
+                      input_words: jnp.ndarray, output_addrs: jnp.ndarray,
+                      n_addr: int) -> jnp.ndarray:
+    """Execute the program on packed inputs.
+
+    Args:
+      src_a/src_b/dst/opcode: (n_steps, n_unit) int32 program streams.
+      input_words: (n_inputs, W) int32 packed inputs (row i = input i).
+      output_addrs: (n_outputs,) int32.
+      n_addr: buffer rows (incl. consts + trash).
+    Returns:
+      (n_outputs, W) int32 packed outputs.
+    """
+    n_inputs, w = input_words.shape
+    buf = jnp.zeros((n_addr, w), jnp.int32)
+    buf = buf.at[1].set(jnp.int32(-1))
+    buf = jax.lax.dynamic_update_slice(buf, input_words.astype(jnp.int32),
+                                       (2, 0))
+
+    def step(s, buf):
+        a = jnp.take(buf, src_a[s], axis=0)       # (n_unit, W)
+        b = jnp.take(buf, src_b[s], axis=0)
+        r = apply_opcode_jnp(opcode[s][:, None], a, b)
+        return buf.at[dst[s]].set(r)
+
+    buf = jax.lax.fori_loop(0, src_a.shape[0], step, buf)
+    return jnp.take(buf, output_addrs, axis=0)

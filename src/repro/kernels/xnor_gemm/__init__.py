@@ -1,0 +1,4 @@
+from repro.kernels.xnor_gemm.ops import xnor_gemm, pack_pm1
+from repro.kernels.xnor_gemm.ref import xnor_gemm_ref
+
+__all__ = ["xnor_gemm", "pack_pm1", "xnor_gemm_ref"]

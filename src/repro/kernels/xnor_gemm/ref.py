@@ -1,0 +1,11 @@
+"""Oracle for the XNOR GEMM: dense +-1 matmul on unpacked bits."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def xnor_gemm_ref(a_bits: jnp.ndarray, b_bits: jnp.ndarray) -> jnp.ndarray:
+    """a_bits: (M, K) {0,1}; b_bits: (N, K) {0,1} -> (M, N) int32 +-1 dot."""
+    a = 2 * a_bits.astype(jnp.int32) - 1
+    b = 2 * b_bits.astype(jnp.int32) - 1
+    return a @ b.T

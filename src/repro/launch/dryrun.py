@@ -1,0 +1,276 @@
+import os
+os.environ["XLA_FLAGS"] = ("--xla_force_host_platform_device_count=512 "
+                           + os.environ.get("XLA_FLAGS", ""))
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the jit'd step function (train_step for train_4k,
+prefill for prefill_32k, decode_step for decode cells) with the production
+shardings, lowers it against ShapeDtypeStruct inputs (no allocation),
+compiles it for the 16x16 (single-pod, 256 chip) and 2x16x16 (two-pod, 512
+chip) meshes, and records:
+
+  * compiled.memory_analysis()  — proves per-device fit
+  * compiled.cost_analysis()    — FLOPs / bytes for the roofline
+  * collective bytes parsed from the post-SPMD HLO text
+
+Results cache to benchmarks/dryrun_results/<arch>__<shape>__<mesh>.json so
+repeated runs are incremental. Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+  PYTHONPATH=src python -m repro.launch.dryrun --all [--mesh pod1|pod2|both]
+"""
+
+import argparse
+import json
+import time
+import traceback
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import (ARCH_IDS, SHAPES, cell_supported, get_config,
+                           input_specs)
+from repro.launch import roofline as rf
+from repro.launch.mesh import make_production_mesh
+from repro.models.pspec_utils import activation_sharding
+from repro.models.transformer import param_shapes
+from repro.optim import adamw_init
+from repro.serve.engine import decode_step, init_decode_cache, prefill
+from repro.train import sharding as shd
+from repro.train.trainer import TrainConfig, make_train_step
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/dryrun_results")
+
+# XLA's while-loop LICM hoists per-iteration bf16->f32 converts of the
+# stacked remat residuals OUT of the backward loop, materializing the whole
+# (L, B, S, D) stack in f32 (2x the honest peak). Disabling the pass keeps
+# the convert per-iteration; measured effect (qwen3-8b train_4k, 256 dev):
+# temp 54.9 -> 30.2 GiB, identical HLO elsewhere. See EXPERIMENTS.md §Perf.
+COMPILER_OPTS = {"xla_disable_hlo_passes": "while-loop-invariant-code-motion"}
+
+# Gradient-accumulation microbatching for the memory giants (the standard
+# fit lever at fixed global batch). Probes (measure_metrics) always use
+# accum=1 so flops/bytes are counted per full step, not per microbatch.
+TRAIN_ACCUM = {"grok-1-314b": 8, "internvl2-76b": 4}
+
+
+def _mesh_name(multi_pod: bool) -> str:
+    return "pod2" if multi_pod else "pod1"
+
+
+def build_lowered(arch: str, shape: str, mesh, *, overrides=None,
+                  train_accum: int | None = None):
+    """Lower the cell's step function on ``mesh``; returns (lowered, meta)."""
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    cell = SHAPES[shape]
+    specs = input_specs(cfg, shape)
+    pshapes = param_shapes(cfg)
+    pshard = shd.param_shardings(cfg, mesh, pshapes)
+    pure_dp = not cfg.tensor_parallel
+    bshard = shd.batch_shardings(mesh, specs, include_model=pure_dp)
+    act_dp = ("pod", "data", "model") if pure_dp else ("pod", "data")
+
+    if cell.kind == "train":
+        tc = TrainConfig(grad_accum=(train_accum if train_accum is not None
+                                     else TRAIN_ACCUM.get(arch, 1)))
+        step = make_train_step(cfg, tc)
+        opt_shapes = jax.eval_shape(adamw_init, pshapes)
+        mshard = shd.moment_shardings(cfg, mesh, pshapes)
+        opt_shard = type(opt_shapes)(step=NamedSharding(mesh, P()),
+                                     mu=mshard, nu=mshard)
+        fn = jax.jit(step,
+                     in_shardings=(pshard, opt_shard,
+                                   {k: bshard[k] for k in specs}),
+                     out_shardings=(pshard, opt_shard, None),
+                     donate_argnums=(0, 1))
+        with mesh, activation_sharding(mesh, act_dp):
+            lowered = fn.lower(pshapes, opt_shapes, specs)
+    elif cell.kind == "prefill":
+        if cfg.is_encoder:
+            # encoder-only: prefill_32k is a pure encode (no decode cache)
+            from repro.models.transformer import forward
+            with mesh, activation_sharding(mesh, act_dp):
+                lowered = jax.jit(
+                    lambda p, b: forward(p, cfg, b),
+                    in_shardings=(pshard, {k: bshard[k] for k in specs}),
+                ).lower(pshapes, specs)
+        else:
+            with mesh, activation_sharding(mesh, act_dp):
+                lowered = jax.jit(
+                    lambda p, b: prefill(p, cfg, b, cell.seq_len),
+                    in_shardings=(pshard, {k: bshard[k] for k in specs}),
+                ).lower(pshapes, specs)
+    else:  # decode
+        pshard = shd.param_shardings(cfg, mesh, pshapes, decode=True)
+        cache_shapes = jax.eval_shape(
+            lambda: init_decode_cache(cfg, cell.global_batch, cell.seq_len))
+        cshard = shd.cache_shardings(cfg, mesh, cache_shapes)
+        with mesh, activation_sharding(mesh, act_dp):
+            lowered = jax.jit(
+                lambda p, t, c: decode_step(p, cfg, t, c),
+                in_shardings=(pshard, bshard["tokens"], cshard),
+                out_shardings=(None, cshard),
+                donate_argnums=(2,),
+            ).lower(pshapes, specs["tokens"], cache_shapes)
+    return lowered, {"cfg": cfg, "cell": cell}
+
+
+def _cell_metrics_of(compiled) -> tuple[float, float, dict]:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    coll = rf.collective_bytes_from_hlo(compiled.as_text())
+    return float(ca.get("flops", 0.0)), float(ca.get("bytes accessed", 0.0)), \
+        coll
+
+
+def measure_metrics(arch: str, shape: str, mesh, compiled,
+                    overrides=None) -> tuple[float, float, dict]:
+    """Per-device (flops, bytes, collective-bytes) with scan correction.
+
+    XLA's cost analysis counts a ``while`` body ONCE, so a scanned L-layer
+    stack reports ~1 layer of flops/bytes, and collectives inside the loop
+    appear once in the HLO text. Fix: lower the model UNROLLED at two
+    shallow depths k1 < k2; per-layer cost = (m(k2) - m(k1)) / (k2 - k1),
+    outside-the-stack cost = m(k1) - k1 * per_layer; total = outside +
+    L * per_layer. Exact for homogeneous stacks (what scan requires).
+    Unscanned configs (hybrid) are measured directly on ``compiled``.
+    """
+    cfg = get_config(arch)
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    if not (cfg.scan_layers and cfg.n_layers > 1):
+        return _cell_metrics_of(compiled)
+    # hybrid: probe whole pattern groups so the per-layer average covers
+    # each block kind in ratio (tail remainder absorbs <4% error at L=26)
+    pat = len(cfg.block_pattern) if cfg.family == "hybrid" else 1
+    k1, k2 = (pat, 2 * pat) if pat > 1 else (2, 4)
+    probes = []
+    for k in (k1, k2):
+        ov = dict(overrides or {})
+        ov.update(n_layers=k, scan_layers=False)
+        lowered, _ = build_lowered(arch, shape, mesh, overrides=ov,
+                                   train_accum=1)
+        probes.append(_cell_metrics_of(
+            lowered.compile(compiler_options=COMPILER_OPTS)))
+    (f1, b1, c1), (f2, b2, c2) = probes
+    L = cfg.n_layers
+
+    def extrap(m1, m2):
+        per_layer = (m2 - m1) / (k2 - k1)
+        return max(0.0, m1 - k1 * per_layer) + L * per_layer
+
+    coll = {key: extrap(c1.get(key, 0), c2.get(key, 0)) for key in c1}
+    return extrap(f1, f2), extrap(b1, b2), coll
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, force: bool = False,
+             overrides=None, tag: str = "", train_accum: int | None = None
+             ) -> dict:
+    mesh_name = _mesh_name(multi_pod)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    out_path = os.path.join(
+        RESULTS_DIR, f"{arch}__{shape}__{mesh_name}{tag}.json")
+    if os.path.exists(out_path) and not force:
+        with open(out_path) as f:
+            return json.load(f)
+
+    cfg = get_config(arch)
+    ok, reason = cell_supported(cfg, shape)
+    result = {"arch": arch, "shape": shape, "mesh": mesh_name,
+              "supported": ok, "reason": reason, "tag": tag}
+    if not ok:
+        with open(out_path, "w") as f:
+            json.dump(result, f, indent=1)
+        return result
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    try:
+        lowered, meta = build_lowered(arch, shape, mesh, overrides=overrides,
+                                      train_accum=train_accum)
+        t_lower = time.time() - t0
+        compiled = lowered.compile(compiler_options=COMPILER_OPTS)
+        t_compile = time.time() - t0 - t_lower
+        mem = compiled.memory_analysis()
+        flops, bytes_, coll = measure_metrics(arch, shape, mesh, compiled,
+                                              overrides=overrides)
+        terms = rf.roofline_from_terms(
+            flops_per_device=flops, bytes_per_device=bytes_,
+            collective_breakdown=coll, chips=chips,
+            model_flops_total=rf.model_flops(meta["cfg"], meta["cell"]))
+        result.update({
+            "ok": True,
+            "chips": chips,
+            "lower_s": round(t_lower, 1),
+            "compile_s": round(t_compile, 1),
+            "memory": {
+                "argument_bytes": int(mem.argument_size_in_bytes),
+                "output_bytes": int(mem.output_size_in_bytes),
+                "temp_bytes": int(mem.temp_size_in_bytes),
+                "alias_bytes": int(mem.alias_size_in_bytes),
+                # CPU XLA computes bf16 math in f32 (no native bf16 units),
+                # inflating every activation temp 2x vs the TPU backend.
+                # Verified: an all-f32 model build has the SAME temp as the
+                # bf16 build (mixtral train_4k: 27.1 vs 25.7 GiB), so the
+                # TPU-bf16 peak estimate is args (real dtypes) + temp/2.
+                "peak_hbm_tpu_est": int(mem.argument_size_in_bytes
+                                        + mem.temp_size_in_bytes / 2),
+                "peak_hbm_cpu": int(mem.argument_size_in_bytes
+                                    + mem.output_size_in_bytes
+                                    + mem.temp_size_in_bytes
+                                    - mem.alias_size_in_bytes),
+            },
+            "roofline": terms.to_dict(),
+        })
+        print(f"[dryrun] {arch} {shape} {mesh_name}{tag}: OK "
+              f"compile {t_compile:.0f}s bound={terms.bound} "
+              f"(c={terms.compute_s*1e3:.1f}ms m={terms.memory_s*1e3:.1f}ms "
+              f"coll={terms.collective_s*1e3:.1f}ms) "
+              f"peak~{result['memory']['peak_hbm_tpu_est']/2**30:.2f}"
+              f"GiB/dev (tpu-est)")
+    except Exception as e:  # noqa: BLE001 — record failures as data
+        result.update({"ok": False, "error": f"{type(e).__name__}: {e}",
+                       "traceback": traceback.format_exc()[-2000:]})
+        print(f"[dryrun] {arch} {shape} {mesh_name}{tag}: FAIL {e}")
+    with open(out_path, "w") as f:
+        json.dump(result, f, indent=1)
+    return result
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=ARCH_IDS + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES) + [None])
+    ap.add_argument("--mesh", default="both",
+                    choices=["pod1", "pod2", "both"])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch is None) else [args.arch]
+    shapes = list(SHAPES) if (args.all or args.shape is None) \
+        else [args.shape]
+    meshes = {"pod1": [False], "pod2": [True],
+              "both": [False, True]}[args.mesh]
+    n_fail = 0
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                r = run_cell(arch, shape, mp, force=args.force)
+                if r.get("supported") and not r.get("ok", False):
+                    n_fail += 1
+    print(f"[dryrun] done; {n_fail} failures")
+    raise SystemExit(1 if n_fail else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Roofline-term extraction from compiled dry-run artifacts.
+
+Three terms per (arch x shape x mesh), in seconds (TPU v5e constants):
+
+    compute    = HLO_FLOPs / (chips * 197e12)
+    memory     = HLO_bytes / (chips * 819e9)
+    collective = collective_bytes / (chips * 50e9)
+
+``compiled.cost_analysis()`` reports per-device flops/bytes (post-SPMD), so
+chips cancel: term = per_device_quantity / per_chip_rate. collective_bytes
+is not in cost_analysis: we parse the post-SPMD HLO text and sum the output
+operand sizes of all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute ops (per-device bytes on the wire, one hop)."""
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, asdict
+
+PEAK_FLOPS = 197e12       # bf16 / chip
+HBM_BW = 819e9            # bytes/s / chip
+ICI_BW = 50e9             # bytes/s / link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g. "bf16[16,4096,256]{2,1,0}" or "f32[]"
+_SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def collective_bytes_from_hlo(hlo_text: str) -> dict[str, int]:
+    """Sum per-device output bytes of each collective op kind."""
+    out: dict[str, int] = {k: 0 for k in _COLLECTIVES}
+    for line in hlo_text.splitlines():
+        s = line.lstrip()
+        # optimized HLO: "%name = TYPE[SHAPE] all-gather(...)" or fusion-free
+        m = re.match(r"%?[\w.\-]+\s*=\s*(.+?)\s+([\w\-]+)\(", s)
+        if not m:
+            continue
+        result_part, opname = m.groups()
+        kind = None
+        for c in _COLLECTIVES:
+            if opname == c or opname.startswith(c + "-"):
+                kind = c
+                break
+        if kind is None:
+            continue
+        # result may be a tuple "(bf16[...], bf16[...])"
+        total = sum(_shape_bytes(d, dims)
+                    for d, dims in _SHAPE_RE.findall(result_part))
+        out[kind] += total
+    return out
+
+
+@dataclass
+class RooflineTerms:
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    collective_breakdown: dict
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    bound: str
+    model_flops_total: float       # 6*N*D or 2*N*D
+    hlo_flops_total: float
+    useful_flops_ratio: float
+    chips: int
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline_from_terms(*, flops_per_device: float, bytes_per_device: float,
+                        collective_breakdown: dict, chips: int,
+                        model_flops_total: float) -> RooflineTerms:
+    flops, raw_bytes = flops_per_device, bytes_per_device
+    coll = collective_breakdown
+    coll_bytes = float(sum(coll.values()))
+    compute_s = flops / PEAK_FLOPS
+    memory_s = raw_bytes / HBM_BW
+    collective_s = coll_bytes / ICI_BW
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    bound = max(terms, key=terms.get)
+    hlo_total = flops * chips
+    return RooflineTerms(
+        flops_per_device=flops, bytes_per_device=raw_bytes,
+        collective_bytes_per_device=coll_bytes, collective_breakdown=coll,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        bound=bound, model_flops_total=model_flops_total,
+        hlo_flops_total=hlo_total,
+        useful_flops_ratio=(model_flops_total / hlo_total
+                            if hlo_total else 0.0),
+        chips=chips)
+
+
+def roofline_from_compiled(compiled, *, chips: int, model_flops_total: float,
+                           hlo_text: str | None = None) -> RooflineTerms:
+    ca = compiled.cost_analysis()
+    if isinstance(ca, list):
+        ca = ca[0]
+    text = hlo_text if hlo_text is not None else compiled.as_text()
+    return roofline_from_terms(
+        flops_per_device=float(ca.get("flops", 0.0)),
+        bytes_per_device=float(ca.get("bytes accessed", 0.0)),
+        collective_breakdown=collective_bytes_from_hlo(text),
+        chips=chips, model_flops_total=model_flops_total)
+
+
+def model_flops(cfg, cell, n_tokens: int | None = None) -> float:
+    """MODEL_FLOPS: 6*N*D (train) / 2*N*D (inference), N = active params."""
+    n_active = cfg.param_count(active_only=True)
+    if n_tokens is None:
+        if cell.kind == "train":
+            n_tokens = cell.global_batch * cell.seq_len
+        elif cell.kind == "prefill":
+            n_tokens = cell.global_batch * cell.seq_len
+        else:
+            n_tokens = cell.global_batch * 1
+    mult = 6 if cell.kind == "train" else 2
+    return float(mult * n_active * n_tokens)

@@ -1,0 +1,198 @@
+"""Attention: GQA + qk-norm + sliding-window + bidirectional + cached decode.
+
+Shapes: x (B, S, D); q heads H, kv heads Hk (H % Hk == 0); head_dim hd.
+GQA is computed grouped — q reshaped (B, S, Hk, G, hd) against k/v
+(B, S, Hk, hd) — so no materialized kv repetition (memory term win).
+
+Decode: the KV cache is (B, C, Hk, hd) per layer. For sliding-window archs
+the cache is a ring buffer of C = window entries (O(window) memory at 500k
+context — the long_500k cells rely on this). The decode softmax is written
+with explicit max/sum so XLA SPMD can convert a *sequence-sharded* cache
+(C over 'model') into local partial attention + a tiny AllReduce — the
+flash-decoding-style layout used when kv_heads < model-axis size.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import apply_rope, rms_norm
+from repro.models.pspec_utils import active_mesh, constrain
+
+NEG_INF = -1e30
+
+
+def _constrain_qkv(q, k, v, cfg):
+    """In-attention layout choice (measured in EXPERIMENTS.md §Perf).
+
+    If the (repeated) head count divides the 'model' axis, shard heads —
+    scores (B, H, S, T) partition on H. Otherwise (minicpm: 36 heads vs
+    model=16) XLA would REPLICATE the S x T score tensor on every device
+    (+35 GiB/dev at train_4k); instead shard the QUERY sequence over
+    'model' (sequence-parallel attention: keys/values gathered, queries
+    local) — causal masking is position-based so a sharded query block
+    masks correctly."""
+    from repro.models.pspec_utils import dp_axes
+    mesh = active_mesh()
+    if mesh is None or "model" not in mesh.axis_names \
+            or "model" in dp_axes():   # pure-DP: batch owns 'model'
+        return q, k, v
+    model = mesh.shape["model"]
+    if cfg.n_heads % model == 0:
+        # shardable heads: XLA's propagation already partitions the score
+        # tensor on H; forcing placements here measured WORSE (qwen3-8b
+        # train_4k collective 7.1 -> 12.2 s/step) — refuted, leave to XLA.
+        return q, k, v
+    q = constrain(q, "dp", "model", None, None)
+    k = constrain(k, "dp", None, None, None)
+    v = constrain(v, "dp", None, None, None)
+    return q, k, v
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray        # (B, C, Hk, hd)
+    v: jnp.ndarray        # (B, C, Hk, hd)
+    # () int32: tokens written so far (ring position = length % C)
+    length: jnp.ndarray
+
+
+def init_cache(batch: int, capacity: int, n_kv_heads: int, head_dim: int,
+               dtype) -> KVCache:
+    shape = (batch, capacity, n_kv_heads, head_dim)
+    return KVCache(k=jnp.zeros(shape, dtype), v=jnp.zeros(shape, dtype),
+                   length=jnp.zeros((), jnp.int32))
+
+
+def _qkv(params, x, cfg):
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    q = (x @ params["wq"].astype(x.dtype)).reshape(b, s, cfg.n_heads, hd)
+    k = (x @ params["wk"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    v = (x @ params["wv"].astype(x.dtype)).reshape(b, s, cfg.n_kv_heads, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def _grouped_scores(q, k):
+    """q (B,S,Hk,G,hd) x k (B,T,Hk,hd) -> (B,Hk,G,S,T)."""
+    return jnp.einsum("bshgd,bthd->bhgst", q, k)
+
+
+def _grouped_out(w, v):
+    """w (B,Hk,G,S,T) x v (B,T,Hk,hd) -> (B,S,Hk,G,hd)."""
+    return jnp.einsum("bhgst,bthd->bshgd", w, v)
+
+
+def attention_forward(params: dict, x: jnp.ndarray, cfg, *,
+                      positions: jnp.ndarray,
+                      causal: bool = True,
+                      window: int = 0) -> jnp.ndarray:
+    """Full (train/prefill) attention. window > 0 => sliding-window causal.
+
+    GQA is computed with KV *repeated to the full H query heads* before the
+    score einsum. Rationale (sharding): kv_heads (8) is smaller than the
+    'model' axis (16), so any layout keyed on kv-heads replicates the
+    (B, heads, S, S) score tensor — 100+ GiB/device at train_4k. Repeating
+    KV keeps the head axis at H (32), which shards cleanly; the repeated
+    K/V themselves are ~MBs. (The grouped, non-repeated form is kept for
+    the decode path, where scores are (B,*,1,C) and C is what we shard.)
+    """
+    b, s, d = x.shape
+    hd = cfg.resolved_head_dim
+    g = cfg.q_per_kv
+    q, k, v = _qkv(params, x, cfg)
+    if not cfg.is_encoder:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if g > 1:
+        k = jnp.repeat(k, g, axis=2)              # (B, T, H, hd)
+        v = jnp.repeat(v, g, axis=2)
+    q, k, v = _constrain_qkv(q, k, v, cfg)
+    scores = jnp.einsum("bshd,bthd->bhst",
+                        q.astype(jnp.float32) * (hd ** -0.5),
+                        k.astype(jnp.float32))    # (B, H, S, T)
+    ii = positions[:, :, None]                    # (B, S, 1) query pos
+    jj = positions[:, None, :]                    # (B, 1, S) key pos
+    if causal:
+        mask = jj <= ii
+        if window:
+            mask &= jj > ii - window
+    else:
+        mask = jnp.ones((b, s, s), bool)
+    scores = jnp.where(mask[:, None, :, :], scores, NEG_INF)
+    w = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    out = jnp.einsum("bhst,bthd->bshd", w, v).reshape(
+        b, s, cfg.n_heads * hd)
+    return out @ params["wo"].astype(x.dtype)
+
+
+def attention_decode(params: dict, x: jnp.ndarray, cfg, cache: KVCache, *,
+                     window: int = 0) -> tuple[jnp.ndarray, KVCache]:
+    """One-token decode step. x: (B, 1, D). Ring-buffer cache when window>0."""
+    b, s, d = x.shape
+    assert s == 1, "decode step takes one token"
+    hd = cfg.resolved_head_dim
+    hk, g = cfg.n_kv_heads, cfg.q_per_kv
+    cap = cache.k.shape[1]
+    pos = cache.length                                      # () int32
+    positions = jnp.broadcast_to(pos[None], (b, 1))
+    q, k, v = _qkv(params, x, cfg)
+    if not cfg.is_encoder:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    slot = jax.lax.rem(pos, jnp.int32(cap))
+    new_k = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype),
+                                         (0, slot, 0, 0))
+    new_v = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype),
+                                         (0, slot, 0, 0))
+    # validity: entry t is live iff written; after the ring wraps, all are
+    t = jnp.arange(cap, dtype=jnp.int32)
+    live = jnp.where(pos + 1 >= cap, jnp.ones((cap,), bool), t <= slot)
+    qg = q.reshape(b, 1, hk, g, hd).astype(jnp.float32) * (hd ** -0.5)
+    scores = _grouped_scores(qg, new_k.astype(jnp.float32))  # (B,Hk,G,1,C)
+    scores = jnp.where(live[None, None, None, None, :], scores, NEG_INF)
+    # explicit max/sum softmax => SPMD-friendly over a C-sharded cache
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    e = jnp.exp(scores - jax.lax.stop_gradient(m))
+    z = jnp.sum(e, axis=-1, keepdims=True)
+    w = (e / z).astype(x.dtype)
+    out = _grouped_out(w, new_v).reshape(b, 1, cfg.n_heads * hd)
+    out = out @ params["wo"].astype(x.dtype)
+    return out, KVCache(k=new_k, v=new_v, length=pos + 1)
+
+
+def prefill_cache(params: dict, x: jnp.ndarray, cfg, capacity: int, *,
+                  positions: jnp.ndarray, window: int = 0
+                  ) -> tuple[jnp.ndarray, KVCache]:
+    """Prefill: full attention + populate the cache (last `capacity` keys)."""
+    b, s, _ = x.shape
+    hd = cfg.resolved_head_dim
+    out = attention_forward(params, x, cfg, positions=positions,
+                            causal=not cfg.is_encoder, window=window)
+    q, k, v = _qkv(params, x, cfg)
+    if not cfg.is_encoder:
+        k = apply_rope(k, positions, cfg.rope_theta)
+    if capacity >= s:
+        pad = capacity - s
+        kc = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        vc = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    else:  # keep the most recent `capacity` (ring layout, slot=s%cap aligned)
+        kc = k[:, s - capacity:]
+        vc = v[:, s - capacity:]
+        # rotate so that entry (t mod cap) sits at index t mod cap
+        shift = jax.lax.rem(jnp.int32(s - capacity), jnp.int32(capacity))
+        kc = jnp.roll(kc, shift, axis=1)
+        vc = jnp.roll(vc, shift, axis=1)
+    cache = KVCache(k=kc.astype(cfg_dtype(cfg)), v=vc.astype(cfg_dtype(cfg)),
+                    length=jnp.asarray(s, jnp.int32))
+    return out, cache
+
+
+def cfg_dtype(cfg):
+    import jax.numpy as jnp
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+        cfg.compute_dtype]

@@ -1,0 +1,73 @@
+"""FFCL-substituted FFN: the paper's technique as a first-class LM feature.
+
+With ``cfg.logic_mlp = True`` a transformer block's FFN becomes a
+*binarized* MLP (NullaNet-compatible): the block input is binarized at a
+sign boundary, the hidden activation is binary, and only the output
+projection is numeric:
+
+    xb = sign01(x);  h = sign01((2xb-1) @ w_in + b_in);  y = (2h-1) @ w_out
+
+Training uses straight-through estimators; after training,
+``ffn_to_program`` runs the NullaNet flow (ISF from calibration data ->
+espresso -> gate factoring -> synth -> sub-kernel scheduling) per layer, and
+``logic_ffn_apply`` executes the xb -> h map as an FFCL *program* — bitwise
+ops only, no w_in matmul, no weight access (paper §7.1's selling point) —
+via the jnp reference semantics (jit-able; the Pallas kernel runs the same
+program on the packed words when called outside jit).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.nullanet import layer_to_graph
+from repro.core.scheduler import LogicProgram, compile_graph
+from repro.kernels.logic_dsp.ops import program_arrays
+from repro.kernels.logic_dsp.ref import logic_forward_ref
+
+
+def _ste01(y: jnp.ndarray) -> jnp.ndarray:
+    soft = 0.5 * (jnp.tanh(y) + 1.0)
+    hard = (y >= 0).astype(jnp.float32)
+    return (soft + jax.lax.stop_gradient(hard - soft)).astype(y.dtype)
+
+
+def binary_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
+    """STE-binarized FFN (training / reference inference path)."""
+    xb = _ste01(x.astype(jnp.float32))
+    h = _ste01((2.0 * xb - 1.0) @ p["w_in"].astype(jnp.float32)
+               + p["b_in"].astype(jnp.float32))
+    return ((2.0 * h - 1.0) @ p["w_out"].astype(jnp.float32)).astype(x.dtype)
+
+
+def ffn_to_program(p: dict, calib_bits: np.ndarray, n_unit: int = 64,
+                   mode: str = "isf", name: str = "ffn"
+                   ) -> LogicProgram:
+    """NullaNet conversion of the xb -> h map of one FFN layer."""
+    w = np.asarray(p["w_in"], np.float64)
+    b = np.asarray(p["b_in"], np.float64)
+    graph = layer_to_graph(calib_bits.astype(np.uint8), w, b, mode=mode,
+                           name=name)
+    return compile_graph(graph, n_unit=n_unit, alloc="liveness")
+
+
+def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray
+                    ) -> jnp.ndarray:
+    """Inference through the compiled FFCL program (bitwise ops only).
+
+    x (B, S, D) -> y (B, S, D). Bit packing runs along the flattened
+    (B*S) sample axis — the paper's SIMD lanes.
+    """
+    from repro.kernels.logic_dsp.ops import pack_bits_jnp, unpack_bits_jnp
+    bsh = x.shape[:-1]
+    d = x.shape[-1]
+    xb = (x.astype(jnp.float32) >= 0).reshape(-1, d)          # (N, D) bits
+    words = pack_bits_jnp(xb)
+    arrs = program_arrays(prog)
+    out_words = logic_forward_ref(
+        arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
+        words, arrs["output_addrs"], arrs["n_addr"])
+    h = unpack_bits_jnp(out_words, xb.shape[0]).astype(jnp.float32)
+    y = (2.0 * h - 1.0) @ p["w_out"].astype(jnp.float32)
+    return y.reshape(*bsh, -1).astype(x.dtype)

@@ -1,0 +1,145 @@
+"""Mamba-2 / SSD (state-space duality) block [arXiv:2405.21060].
+
+Chunked SSD algorithm: split the sequence into chunks of Q tokens; within a
+chunk, outputs are a masked (causal, decay-weighted) quadratic attention-like
+product; across chunks, a tiny recurrent state (H, P, N) is carried by a
+``lax.scan``. Train/prefill cost is O(S*Q) intra + O(S/Q) scan — the
+sub-quadratic property that makes the mamba2 ``long_500k`` cell feasible.
+
+Decode is O(1): state <- decay * state + dt*B (x) x;  y = C . state.
+
+Multi-value attention (MVA) layout as in the paper: B and C are shared
+across heads (n_groups = 1), A is scalar per head, x has (H, P) heads.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class SSMState(NamedTuple):
+    state: jnp.ndarray     # (B, H, P, N)
+    conv: jnp.ndarray      # (B, W-1, d_conv_in) trailing conv window
+    length: jnp.ndarray    # () int32
+
+
+def ssm_dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    nh = cfg.ssm_heads or (d_in // cfg.ssm_head_dim)
+    return d_in, nh, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def _segsum(log_a: jnp.ndarray) -> jnp.ndarray:
+    """log_a (..., Q) -> (..., Q, Q) lower-triangular cumulative sums:
+    out[i, j] = sum_{k=j+1..i} log_a[k] for i >= j, -inf otherwise."""
+    q = log_a.shape[-1]
+    cs = jnp.cumsum(log_a, axis=-1)
+    diff = cs[..., :, None] - cs[..., None, :]       # sum_{j+1..i}
+    ii = jnp.arange(q)
+    mask = ii[:, None] >= ii[None, :]
+    return jnp.where(mask, diff, -jnp.inf)
+
+
+def ssd_chunked(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                bmat: jnp.ndarray, cmat: jnp.ndarray, chunk: int,
+                init_state: jnp.ndarray | None = None
+                ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """SSD scan.
+
+    Args:
+      x: (B, S, H, P) inputs. dt: (B, S, H) positive step sizes.
+      a_log: (H,) log of -A (A negative) -> per-step decay exp(-dt*exp(a_log)).
+      bmat/cmat: (B, S, N) shared across heads.
+      chunk: Q.
+    Returns: (y (B, S, H, P), final_state (B, H, P, N)).
+    """
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        # zero-pad the tail: dt=0 -> decay=1 and zero input, so the carried
+        # state is untouched; padded outputs are sliced off below.
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        s_out, s = s, s + pad
+    else:
+        s_out = s
+    nc = s // chunk
+    # per-step log decay: -dt * exp(a_log)  (negative)
+    log_a = (-dt.astype(jnp.float32) *
+             jnp.exp(a_log.astype(jnp.float32))[None, None, :])  # (B,S,H)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+
+    # chunked views: (B, NC, Q, ...)
+    def ch(t):
+        return t.reshape(b, nc, chunk, *t.shape[2:])
+
+    xc, lac = ch(xdt), ch(log_a)
+    bc, cc = ch(bmat.astype(jnp.float32)), ch(cmat.astype(jnp.float32))
+
+    # --- intra-chunk (diagonal blocks): decay-masked quadratic form ---
+    lseg = _segsum(lac.transpose(0, 1, 3, 2))            # (B,NC,H,Q,Q)
+    decay = jnp.exp(lseg)
+    scores = jnp.einsum("bcin,bcjn->bcij", cc, bc)       # (B,NC,Q,Q)
+    w = scores[:, :, None] * decay                       # (B,NC,H,Q,Q)
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", w, xc)
+
+    # --- chunk states: decay-to-end weighted sum of B (x) x ---
+    la_sum = lac.sum(axis=2)                             # (B,NC,H)
+    decay_to_end = jnp.exp(la_sum[:, :, None, :] -
+                           jnp.cumsum(lac, axis=2))      # (B,NC,Q,H)
+    states = jnp.einsum("bcqh,bcqn,bcqhp->bchpn",
+                        decay_to_end, bc, xc)            # (B,NC,H,P,N)
+
+    # --- inter-chunk recurrence (scan over chunks) ---
+    if init_state is None:
+        init_state = jnp.zeros((b, h, p, n), jnp.float32)
+
+    def scan_fn(carry, inp):
+        st_in = carry                                    # (B,H,P,N)
+        chunk_state, chunk_decay = inp                   # (B,H,P,N),(B,H)
+        st_out = chunk_state + chunk_decay[..., None, None] * st_in
+        return st_out, st_in                             # emit PRE-state
+
+    chunk_decay = jnp.exp(la_sum).transpose(1, 0, 2)     # (NC,B,H)
+    states_t = states.transpose(1, 0, 2, 3, 4)           # (NC,B,H,P,N)
+    final_state, pre_states = jax.lax.scan(
+        scan_fn, init_state, (states_t, chunk_decay))
+    pre_states = pre_states.transpose(1, 0, 2, 3, 4)     # (B,NC,H,P,N)
+
+    # --- inter-chunk contribution: C . decayed carried state ---
+    decay_from_start = jnp.exp(jnp.cumsum(lac, axis=2))  # (B,NC,Q,H)
+    y_off = jnp.einsum("bcqn,bcqh,bchpn->bcqhp",
+                       cc, decay_from_start, pre_states)
+    y = (y_diag + y_off).reshape(b, s, h, p)
+    return y[:, :s_out], final_state
+
+
+def ssd_decode_step(x: jnp.ndarray, dt: jnp.ndarray, a_log: jnp.ndarray,
+                    bvec: jnp.ndarray, cvec: jnp.ndarray,
+                    state: jnp.ndarray) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """One token: x (B,H,P), dt (B,H), bvec/cvec (B,N), state (B,H,P,N)."""
+    decay = jnp.exp(-dt.astype(jnp.float32) *
+                    jnp.exp(a_log.astype(jnp.float32))[None, :])  # (B,H)
+    xdt = x.astype(jnp.float32) * dt.astype(jnp.float32)[..., None]
+    upd = jnp.einsum("bhp,bn->bhpn", xdt, bvec.astype(jnp.float32))
+    new_state = state * decay[..., None, None] + upd
+    y = jnp.einsum("bhpn,bn->bhp", new_state, cvec.astype(jnp.float32))
+    return y, new_state
+
+
+def ssd_reference(x, dt, a_log, bmat, cmat):
+    """O(S) sequential oracle for tests: plain per-token recurrence."""
+    b, s, h, p = x.shape
+    n = bmat.shape[-1]
+    state = jnp.zeros((b, h, p, n), jnp.float32)
+    ys = []
+    for t in range(s):
+        y, state = ssd_decode_step(x[:, t], dt[:, t], a_log, bmat[:, t],
+                                   cmat[:, t], state)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,81 @@
+"""Activation sharding constraints, mesh-context aware but test-friendly.
+
+Model code calls ``constrain(x, 'dp', None, None)`` with *logical* axes:
+  'dp'    -> shard over ('pod','data') (whichever exist in the mesh)
+  'model' -> shard over 'model'
+  None    -> replicated dim
+
+The launcher/trainer activates a mesh via ``activation_sharding(mesh)``;
+without it (unit tests on one device) constrain() is a no-op. Dims that
+don't divide the axis size degrade to replication (e.g. batch=1 long_500k).
+"""
+from __future__ import annotations
+
+import contextlib
+from typing import Optional
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+_ACTIVE: Optional[Mesh] = None
+_DP_AXES: tuple = ("pod", "data")
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh | None, dp_axes: tuple = ("pod", "data")):
+    """dp_axes: which mesh axes carry the batch. Pure-DP configs
+    (cfg.tensor_parallel=False) pass ('pod','data','model')."""
+    global _ACTIVE, _DP_AXES
+    prev, _ACTIVE = _ACTIVE, mesh
+    prev_dp, _DP_AXES = _DP_AXES, dp_axes
+    try:
+        yield
+    finally:
+        _ACTIVE = prev
+        _DP_AXES = prev_dp
+
+
+def active_mesh() -> Mesh | None:
+    return _ACTIVE
+
+
+def dp_axes() -> tuple:
+    return _DP_AXES
+
+
+def _resolve(axis, dim: int, mesh: Mesh):
+    if axis is None:
+        return None
+    if axis == "dp":
+        names = tuple(n for n in _DP_AXES if n in mesh.axis_names)
+        # biggest divisible contiguous subset (mirrors sharding.batch_pspec)
+        best, best_total = None, 1
+        for i in range(len(names)):
+            for j in range(i + 1, len(names) + 1):
+                total = 1
+                for n in names[i:j]:
+                    total *= mesh.shape[n]
+                if dim % total == 0 and total > best_total:
+                    best, best_total = names[i:j], total
+        return best
+    if axis in mesh.axis_names and dim % mesh.shape[axis] == 0:
+        return axis
+    return None
+
+
+def constrain(x, *axes):
+    mesh = _ACTIVE
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(f"spec rank {len(axes)} != tensor rank {x.ndim}")
+    resolved, used = [], set()
+    for a, d in zip(axes, x.shape):
+        r = _resolve(a, d, mesh)
+        names = (r,) if isinstance(r, str) else (r or ())
+        if any(n in used for n in names):   # pure-DP: 'dp' may own 'model'
+            r = None
+        used.update(names)
+        resolved.append(r)
+    spec = P(*resolved)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

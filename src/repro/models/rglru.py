@@ -1,0 +1,92 @@
+"""RG-LRU recurrence (Griffin / RecurrentGemma) [arXiv:2402.19427].
+
+    r_t = sigmoid(W_a x_t + b_a)                 (recurrence gate)
+    i_t = sigmoid(W_x x_t + b_x)                 (input gate)
+    a_t = exp(c * r_t * log(sigmoid(Lambda)))    (= a^{c r_t}, a in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t)
+
+Train/prefill uses ``jax.lax.associative_scan`` over (log_a, b) pairs —
+O(log S) depth, the sub-quadratic path for the long_500k cell. Decode is a
+single fused step on a carried state (O(1) memory).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def _gates(params, x):
+    r = jax.nn.sigmoid(x.astype(jnp.float32) @
+                       params["w_a"].astype(jnp.float32) + params["b_a"])
+    i = jax.nn.sigmoid(x.astype(jnp.float32) @
+                       params["w_x"].astype(jnp.float32) + params["b_x"])
+    return r, i
+
+
+def _log_a(params, r, c: float):
+    # log a_t = c * r_t * log sigmoid(Lambda)   (<= 0)
+    log_lam = jax.nn.log_sigmoid(params["lam"].astype(jnp.float32))
+    return c * r * log_lam[None, None, :]
+
+
+def rglru_scan(params, x: jnp.ndarray, c: float = 8.0,
+               init_h: jnp.ndarray | None = None
+               ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """x: (B, S, D_rnn) -> (h (B, S, D_rnn), final h (B, D_rnn))."""
+    b, s, d = x.shape
+    r, i = _gates(params, x)
+    log_a = _log_a(params, r, c)                           # (B,S,D)
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i * x.astype(jnp.float32))
+
+    # h_t = a_t h_{t-1} + g_t: associative over pairs (a, g):
+    #   (a2, g2) o (a1, g1) = (a1*a2, a2*g1 + g2)
+    def combine(l, rgt):
+        a_l, g_l = l
+        a_r, g_r = rgt
+        return a_l * a_r, a_r * g_l + g_r
+
+    if init_h is not None:
+        gated = gated.at[:, 0].add(a[:, 0] * init_h.astype(jnp.float32))
+    _, h = jax.lax.associative_scan(combine, (a, gated), axis=1)
+    return h.astype(x.dtype), h[:, -1].astype(jnp.float32)
+
+
+def rglru_step(params, x_t: jnp.ndarray, h_prev: jnp.ndarray, c: float = 8.0
+               ) -> jnp.ndarray:
+    """One decode step: x_t (B, D_rnn), h_prev (B, D_rnn) -> h_t."""
+    r, i = _gates(params, x_t[:, None, :])
+    log_a = _log_a(params, r, c)[:, 0]
+    a = jnp.exp(log_a)
+    g = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * (
+        i[:, 0] * x_t.astype(jnp.float32))
+    return a * h_prev.astype(jnp.float32) + g
+
+
+def rglru_reference(params, x: jnp.ndarray, c: float = 8.0) -> jnp.ndarray:
+    """Sequential oracle."""
+    b, s, d = x.shape
+    h = jnp.zeros((b, d), jnp.float32)
+    out = []
+    for t in range(s):
+        h = rglru_step(params, x[:, t], h, c)
+        out.append(h)
+    return jnp.stack(out, axis=1).astype(x.dtype)
+
+
+def temporal_conv(params, x: jnp.ndarray, width: int,
+                  carry: jnp.ndarray | None = None
+                  ) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Depthwise causal conv1d; carry (B, width-1, D) for decode chaining."""
+    b, s, d = x.shape
+    w = params["conv_w"].astype(jnp.float32)               # (width, D)
+    if carry is None:
+        carry = jnp.zeros((b, width - 1, d), x.dtype)
+    xx = jnp.concatenate([carry.astype(x.dtype), x], axis=1)
+    out = jnp.zeros((b, s, d), jnp.float32)
+    for k in range(width):
+        out = out + xx[:, k:k + s].astype(jnp.float32) * w[k]
+    new_carry = xx[:, -(width - 1):] if width > 1 else \
+        jnp.zeros((b, 0, d), x.dtype)
+    return out.astype(x.dtype), new_carry

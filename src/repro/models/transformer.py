@@ -1,0 +1,428 @@
+"""Model assembly for every assigned architecture family.
+
+One parameter pytree + three entry points:
+
+  * ``train_loss(params, cfg, batch)``   — next-token (or masked-frame) loss
+  * ``prefill(params, cfg, batch, cap)`` — full forward + cache population
+  * ``decode_step(params, cfg, tokens, cache)`` — one token, O(1)/O(window)
+
+Families: dense (llama/qwen-style GQA+SwiGLU), moe (Mixtral/Grok top-2),
+ssm (Mamba-2/SSD), audio (encoder-only, stub frontend), vlm (LM backbone +
+stub patch embeddings), hybrid (RecurrentGemma RG-LRU + local attention).
+
+Homogeneous stacks scan over layers (keeps HLO small: one block compiled
+once — essential for 512-way SPMD compiles); the hybrid family python-loops
+over its 26 heterogeneous layers.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe, rglru
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import (gelu_mlp, normal_init, ones_init, rms_norm,
+                                 softmax_xent, swiglu, zeros_init)
+from repro.models.pspec_utils import constrain
+
+
+def _dtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[cfg.param_dtype]
+
+
+def _cdtype(cfg: ModelConfig):
+    return {"bfloat16": jnp.bfloat16, "float32": jnp.float32}[
+        cfg.compute_dtype]
+
+
+# ===========================================================================
+# Parameter construction
+# ===========================================================================
+
+def _attn_params(cfg, d):
+    hd = cfg.resolved_head_dim
+    p = {
+        "attn_norm": ("ones", (d,)),
+        "wq": ("normal", (d, cfg.n_heads * hd)),
+        "wk": ("normal", (d, cfg.n_kv_heads * hd)),
+        "wv": ("normal", (d, cfg.n_kv_heads * hd)),
+        "wo": ("normal", (cfg.n_heads * hd, d)),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ("ones", (hd,))
+        p["k_norm"] = ("ones", (hd,))
+    return p
+
+
+def _mlp_params(cfg, d):
+    if cfg.family == "audio":
+        return {"mlp_norm": ("ones", (d,)),
+                "w_in": ("normal", (d, cfg.d_ff)),
+                "w_out": ("normal", (cfg.d_ff, d))}
+    return {"mlp_norm": ("ones", (d,)),
+            "w_gate": ("normal", (d, cfg.d_ff)),
+            "w_up": ("normal", (d, cfg.d_ff)),
+            "w_down": ("normal", (cfg.d_ff, d))}
+
+
+def _moe_params(cfg, d):
+    e, f = cfg.n_experts, cfg.d_ff
+    return {"mlp_norm": ("ones", (d,)),
+            "w_router": ("normal", (d, e)),
+            "w_gate": ("normal", (e, d, f)),
+            "w_up": ("normal", (e, d, f)),
+            "w_down": ("normal", (e, f, d))}
+
+
+def _ssm_params(cfg, d):
+    d_in, nh, p, n = mamba2.ssm_dims(cfg)
+    conv_ch = d_in + 2 * n
+    return {
+        "norm": ("ones", (d,)),
+        "in_proj": ("normal", (d, 2 * d_in + 2 * n + nh)),
+        "conv_w": ("normal", (cfg.ssm_conv_width, conv_ch)),
+        "dt_bias": ("zeros", (nh,)),
+        "a_log": ("zeros", (nh,)),
+        "skip_d": ("ones", (nh,)),
+        "out_norm": ("ones", (d_in,)),
+        "out_proj": ("normal", (d_in, d)),
+    }
+
+
+def _rec_params(cfg, d):
+    d_rnn = cfg.n_heads * cfg.resolved_head_dim
+    return {
+        "attn_norm": ("ones", (d,)),          # pre-norm of the mixing block
+        "gate_proj": ("normal", (d, d_rnn)),
+        "rnn_proj": ("normal", (d, d_rnn)),
+        "conv_w": ("normal", (cfg.ssm_conv_width, d_rnn)),
+        "w_a": ("normal", (d_rnn, d_rnn)),
+        "b_a": ("zeros", (d_rnn,)),
+        "w_x": ("normal", (d_rnn, d_rnn)),
+        "b_x": ("zeros", (d_rnn,)),
+        "lam": ("ones", (d_rnn,)),
+        "out_proj": ("normal", (d_rnn, d)),
+    }
+
+
+def block_param_spec(cfg: ModelConfig, kind: str) -> dict:
+    d = cfg.d_model
+    if kind == "ssm":
+        return _ssm_params(cfg, d)
+    if kind == "rec":
+        return {**_rec_params(cfg, d), **_mlp_params(cfg, d)}
+    if kind == "moe":
+        return {**_attn_params(cfg, d), **_moe_params(cfg, d)}
+    # dense / audio / vlm / hybrid-attn
+    return {**_attn_params(cfg, d), **_mlp_params(cfg, d)}
+
+
+def iter_layer_params(params: dict, cfg: ModelConfig):
+    """Yield one param dict per layer regardless of storage layout
+    (unrolled list / hybrid group-stack). Used by the decode/prefill paths,
+    which python-loop heterogeneous stacks."""
+    if "layers" in params:
+        yield from params["layers"]
+        return
+    if "groups" in params:
+        plen = len(cfg.block_pattern)
+        n_groups, _ = hybrid_grouping(cfg)
+        for g in range(n_groups):
+            for j in range(plen):
+                yield jax.tree.map(lambda a, g=g: a[g], params["groups"][j])
+        yield from params["tail"]
+        return
+    for i in range(cfg.n_layers):
+        yield jax.tree.map(lambda a, i=i: a[i], params["blocks"])
+
+
+def layer_kinds(cfg: ModelConfig) -> list[str]:
+    if cfg.family == "ssm":
+        return ["ssm"] * cfg.n_layers
+    if cfg.family == "hybrid":
+        pat = cfg.block_pattern or ("rec", "rec", "attn")
+        # normalize: pattern "attn" entries are plain dense blocks
+        return [("dense" if pat[i % len(pat)] == "attn" else
+                 pat[i % len(pat)]) for i in range(cfg.n_layers)]
+    if cfg.family == "moe":
+        return ["moe"] * cfg.n_layers
+    return ["dense"] * cfg.n_layers
+
+
+def hybrid_grouping(cfg: ModelConfig) -> tuple[int, int]:
+    """(n_groups, n_tail) for scanning a heterogeneous pattern stack."""
+    plen = len(cfg.block_pattern) or 1
+    n_groups = cfg.n_layers // plen
+    return n_groups, cfg.n_layers - n_groups * plen
+
+
+def param_spec(cfg: ModelConfig) -> dict:
+    """Nested dict of (init_kind, shape) — consumed by init and eval_shape."""
+    d = cfg.d_model
+    spec: dict[str, Any] = {"final_norm": ("ones", (d,))}
+    vp = cfg.padded_vocab
+    if cfg.family == "audio":
+        spec["frontend_proj"] = ("normal", (cfg.frontend_dim, d))
+        spec["head"] = ("normal", (d, vp))
+    else:
+        spec["embed"] = ("normal", (vp, d))
+        if not cfg.tie_embeddings:
+            spec["lm_head"] = ("normal", (d, vp))
+    kinds = layer_kinds(cfg)
+    if cfg.scan_layers and len(set(kinds)) == 1:
+        # homogeneous: stack layer dim onto every leaf
+        blk = block_param_spec(cfg, kinds[0])
+        spec["blocks"] = {k: (ik, (cfg.n_layers, *shape))
+                          for k, (ik, shape) in blk.items()}
+    elif cfg.scan_layers and cfg.family == "hybrid" and cfg.block_pattern:
+        # heterogeneous pattern: scan over whole (rec, rec, attn) GROUPS —
+        # one group compiled once instead of 26 unrolled layers (a 512-way
+        # SPMD hybrid train cell compiles in ~1 min vs 30+ unrolled).
+        n_groups, n_tail = hybrid_grouping(cfg)
+        plen = len(cfg.block_pattern)
+        spec["groups"] = [
+            {k: (ik, (n_groups, *shape))
+             for k, (ik, shape) in block_param_spec(cfg, kinds[j]).items()}
+            for j in range(plen)]
+        spec["tail"] = [block_param_spec(cfg, kinds[n_groups * plen + j])
+                        for j in range(n_tail)]
+    else:
+        spec["layers"] = [block_param_spec(cfg, k) for k in kinds]
+    return spec
+
+
+_INITS = {"normal": normal_init, "zeros": zeros_init, "ones": ones_init}
+
+
+def init_params(cfg: ModelConfig, key) -> dict:
+    dt = _dtype(cfg)
+    leaves = []
+
+    def build(spec, path=()):
+        if isinstance(spec, dict):
+            return {k: build(v, path + (k,)) for k, v in spec.items()}
+        if isinstance(spec, list):
+            return [build(v, path + (str(i),)) for i, v in enumerate(spec)]
+        ik, shape = spec
+        sub = jax.random.fold_in(key, hash(path) % (2 ** 31))
+        scale = 0.02
+        if path[-1] in ("lam",):
+            # Griffin init: a ~ uniform in [0.9, 0.999] -> lam = logit(a)
+            return jnp.full(shape, 4.0, dt)
+        return _INITS[ik](sub, shape, dt, scale)
+
+    return build(param_spec(cfg))
+
+
+def param_shapes(cfg: ModelConfig) -> Any:
+    """ShapeDtypeStruct pytree (no allocation) — dry-run path."""
+    dt = _dtype(cfg)
+
+    def build(spec):
+        if isinstance(spec, dict):
+            return {k: build(v) for k, v in spec.items()}
+        if isinstance(spec, list):
+            return [build(v) for v in spec]
+        _, shape = spec
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    return build(param_spec(cfg))
+
+
+# ===========================================================================
+# Block forwards (train/prefill path)
+# ===========================================================================
+
+def _attn_block(p, x, cfg, positions, window):
+    h = rms_norm(x, p["attn_norm"])
+    h = attn.attention_forward(p, h, cfg, positions=positions,
+                               causal=not cfg.is_encoder, window=window)
+    x = x + h
+    h = rms_norm(x, p["mlp_norm"])
+    if cfg.family == "audio":
+        h = gelu_mlp(h, p["w_in"], p["w_out"])
+    else:
+        h = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x + h
+
+
+def _moe_block(p, x, cfg, positions, window):
+    h = rms_norm(x, p["attn_norm"])
+    h = attn.attention_forward(p, h, cfg, positions=positions,
+                               causal=True, window=window)
+    x = x + h
+    h = rms_norm(x, p["mlp_norm"])
+    h = moe.moe_forward(p, h, cfg)
+    return x + h
+
+
+def _ssm_mix(p, xz, cfg, conv_carry=None, init_state=None):
+    """Core mamba2 mixing on pre-normed input. Returns (y, carry, state)."""
+    b, s, d = xz.shape
+    d_in, nh, hp, n = mamba2.ssm_dims(cfg)
+    zxbcdt = xz @ p["in_proj"].astype(xz.dtype)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, new_carry = rglru.temporal_conv(
+        {"conv_w": p["conv_w"]}, conv_in, cfg.ssm_conv_width, conv_carry)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(xz.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    xh = xin.reshape(b, s, nh, hp)
+    y, state = mamba2.ssd_chunked(xh, dt, p["a_log"], bmat, cmat,
+                                  cfg.ssm_chunk, init_state)
+    y = y + xh.astype(jnp.float32) * p["skip_d"].astype(jnp.float32)[
+        None, None, :, None]
+    y = y.reshape(b, s, d_in).astype(xz.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(xz.dtype)
+    y = rms_norm(y, p["out_norm"])
+    return y @ p["out_proj"].astype(xz.dtype), new_carry, state
+
+
+def _ssm_block(p, x, cfg):
+    h = rms_norm(x, p["norm"])
+    y, _, _ = _ssm_mix(p, h, cfg)
+    return x + y
+
+
+def _rec_mix(p, h, cfg, conv_carry=None, init_h=None):
+    """Griffin recurrent mixing on pre-normed input."""
+    gate = jax.nn.gelu((h @ p["gate_proj"].astype(h.dtype)
+                        ).astype(jnp.float32)).astype(h.dtype)
+    u = h @ p["rnn_proj"].astype(h.dtype)
+    u, new_carry = rglru.temporal_conv({"conv_w": p["conv_w"]}, u,
+                                       cfg.ssm_conv_width, conv_carry)
+    lru_p = {k: p[k] for k in ("w_a", "b_a", "w_x", "b_x", "lam")}
+    u, h_last = rglru.rglru_scan(lru_p, u, cfg.rglru_c, init_h)
+    y = (gate * u) @ p["out_proj"].astype(h.dtype)
+    return y, new_carry, h_last
+
+
+def _rec_block(p, x, cfg):
+    h = rms_norm(x, p["attn_norm"])
+    y, _, _ = _rec_mix(p, h, cfg)
+    x = x + y
+    h = rms_norm(x, p["mlp_norm"])
+    return x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+
+
+def _block_fn(cfg, kind):
+    if kind == "ssm":
+        return lambda p, x, pos: _ssm_block(p, x, cfg)
+    if kind == "rec":
+        return lambda p, x, pos: _rec_block(p, x, cfg)
+    if kind == "moe":
+        return lambda p, x, pos: _moe_block(p, x, cfg, pos,
+                                            cfg.sliding_window)
+    window = cfg.local_window if (cfg.family == "hybrid" and kind == "dense"
+                                  ) else cfg.sliding_window
+    return lambda p, x, pos: _attn_block(p, x, cfg, pos, window)
+
+
+def _maybe_remat(fn, cfg):
+    if cfg.remat == "full":
+        return jax.checkpoint(fn)
+    if cfg.remat == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.checkpoint_dots)
+    return fn
+
+
+# ===========================================================================
+# Full forward
+# ===========================================================================
+
+def embed_inputs(params, cfg, batch) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Returns (x (B, S, D), positions (B, S))."""
+    cdt = _cdtype(cfg)
+    if cfg.family == "audio":
+        x = batch["frames"].astype(cdt) @ params["frontend_proj"].astype(cdt)
+    elif cfg.family == "vlm":
+        tok = params["embed"].astype(cdt)[batch["tokens"]]
+        vis = batch["vision"].astype(cdt)          # stub patch embeddings
+        x = jnp.concatenate([vis, tok], axis=1)
+    else:
+        x = params["embed"].astype(cdt)[batch["tokens"]]
+    b, s = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(s, dtype=jnp.int32)[None], (b, s))
+    return x, positions
+
+
+def forward(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    """Logits (B, S, V)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    # seq_parallel (Megatron-SP): the residual stream between blocks is
+    # sequence-sharded over 'model', so the per-layer saved carries of the
+    # backward scan shrink by the TP degree; XLA inserts the all-gather /
+    # reduce-scatter pair at the block boundary.
+    seq_ax = "model" if cfg.seq_parallel else None
+    x = constrain(x, "dp", seq_ax, None)
+    kinds = layer_kinds(cfg)
+    if "blocks" in params:                            # homogeneous scan
+        fn = _maybe_remat(_block_fn(cfg, kinds[0]), cfg)
+
+        def body(x, lp):
+            return constrain(fn(lp, x, positions), "dp", seq_ax, None), None
+
+        x, _ = jax.lax.scan(body, x, params["blocks"])
+    elif "groups" in params:                          # hybrid group scan
+        plen = len(cfg.block_pattern)
+        fns = [_block_fn(cfg, kinds[j]) for j in range(plen)]
+
+        def group_fn(gps, x, positions):
+            for fn, gp in zip(fns, gps):
+                x = constrain(fn(gp, x, positions), "dp", seq_ax, None)
+            return x
+
+        gfn = _maybe_remat(group_fn, cfg)
+
+        def gbody(x, gps):
+            return gfn(gps, x, positions), None
+
+        x, _ = jax.lax.scan(gbody, x, tuple(params["groups"]))
+        n_groups, n_tail = hybrid_grouping(cfg)
+        for j, lp in enumerate(params["tail"]):
+            kind = kinds[n_groups * plen + j]
+            x = _maybe_remat(_block_fn(cfg, kind), cfg)(lp, x, positions)
+            x = constrain(x, "dp", seq_ax, None)
+    else:
+        for lp, kind in zip(params["layers"], kinds):
+            x = _maybe_remat(_block_fn(cfg, kind), cfg)(lp, x, positions)
+            x = constrain(x, "dp", seq_ax, None)
+    x = rms_norm(x, params["final_norm"])
+    return lm_logits(params, cfg, x)
+
+
+def lm_logits(params, cfg: ModelConfig, x) -> jnp.ndarray:
+    """(…, D) -> (…, padded_vocab) fp32 logits, pad columns at -inf."""
+    if cfg.family == "audio":
+        head = params["head"]
+    elif cfg.tie_embeddings:
+        head = params["embed"].T
+    else:
+        head = params["lm_head"]
+    logits = (x @ head.astype(x.dtype)).astype(jnp.float32)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad = jax.lax.broadcasted_iota(jnp.int32, logits.shape,
+                                       logits.ndim - 1) >= cfg.vocab_size
+        logits = jnp.where(pad, -1e30, logits)
+    spec = ["dp"] + [None] * (logits.ndim - 2) + ["model"]
+    return constrain(logits, *spec)
+
+
+def train_loss(params, cfg: ModelConfig, batch) -> jnp.ndarray:
+    logits = forward(params, cfg, batch)
+    if cfg.family == "audio":
+        return softmax_xent(logits, batch["labels"])
+    if cfg.family == "vlm":
+        n_vis = batch["vision"].shape[1]
+        text_logits = logits[:, n_vis:]
+        return softmax_xent(text_logits[:, :-1], batch["tokens"][:, 1:])
+    return softmax_xent(logits[:, :-1], batch["tokens"][:, 1:])

@@ -1,0 +1,14 @@
+from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.schedule import wsd_schedule, cosine_schedule, linear_warmup
+from repro.optim.clip import clip_by_global_norm
+from repro.optim.compression import (compress_int8, decompress_int8,
+                                     ErrorFeedbackState, ef_init, ef_compress,
+                                     ef_decompress_apply)
+
+__all__ = [
+    "AdamWState", "adamw_init", "adamw_update",
+    "wsd_schedule", "cosine_schedule", "linear_warmup",
+    "clip_by_global_norm",
+    "compress_int8", "decompress_int8", "ErrorFeedbackState", "ef_init",
+    "ef_compress", "ef_decompress_apply",
+]

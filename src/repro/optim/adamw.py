@@ -1,0 +1,61 @@
+"""AdamW with decoupled weight decay, pytree-native, shard-friendly.
+
+Moments are stored in ``moment_dtype`` (fp32 default; bf16 optional to cut
+the optimizer-state memory roofline term in half — see EXPERIMENTS.md §Perf).
+State shapes mirror the param pytree, so FSDP shardings apply verbatim.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jnp.ndarray     # () int32
+    mu: Any               # pytree like params
+    nu: Any               # pytree like params
+
+
+def adamw_init(params: Any, moment_dtype=jnp.float32) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, dtype=moment_dtype)
+    return AdamWState(
+        step=jnp.zeros((), jnp.int32),
+        mu=jax.tree.map(zeros, params),
+        nu=jax.tree.map(zeros, params),
+    )
+
+
+def adamw_update(grads: Any, state: AdamWState, params: Any, *,
+                 lr, b1: float = 0.9, b2: float = 0.95,
+                 eps: float = 1e-8, weight_decay: float = 0.1
+                 ) -> tuple[Any, AdamWState]:
+    """Returns (new_params, new_state). ``lr`` may be a scalar or callable(step)."""
+    step = state.step + 1
+    lr_t = lr(step) if callable(lr) else lr
+    b1c = 1.0 - b1 ** step.astype(jnp.float32)
+    b2c = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(p, g, mu, nu):
+        g32 = g.astype(jnp.float32)
+        mu_n = b1 * mu.astype(jnp.float32) + (1 - b1) * g32
+        nu_n = b2 * nu.astype(jnp.float32) + (1 - b2) * g32 * g32
+        mu_hat = mu_n / b1c
+        nu_hat = nu_n / b2c
+        delta = mu_hat / (jnp.sqrt(nu_hat) + eps) + weight_decay * (
+            p.astype(jnp.float32))
+        p_n = p.astype(jnp.float32) - lr_t * delta
+        return (p_n.astype(p.dtype), mu_n.astype(mu.dtype),
+                nu_n.astype(nu.dtype))
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_mu = treedef.flatten_up_to(state.mu)
+    flat_nu = treedef.flatten_up_to(state.nu)
+    out = [upd(p, g, m, n)
+           for p, g, m, n in zip(flat_p, flat_g, flat_mu, flat_nu)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_mu = treedef.unflatten([o[1] for o in out])
+    new_nu = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step=step, mu=new_mu, nu=new_nu)

@@ -1,0 +1,38 @@
+"""LR schedules. WSD (warmup-stable-decay) is MiniCPM's schedule
+[arXiv:2404.06395] — required by the minicpm-2b assigned architecture."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def linear_warmup(step, warmup_steps: int, peak: float):
+    s = jnp.asarray(step, jnp.float32)
+    return peak * jnp.minimum(1.0, s / jnp.maximum(1, warmup_steps))
+
+
+def wsd_schedule(peak: float, warmup_steps: int, stable_steps: int,
+                 decay_steps: int, final_frac: float = 0.1):
+    """Warmup -> Stable (constant) -> Decay (exponential-ish to final_frac)."""
+
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / jnp.maximum(1, warmup_steps))
+        in_decay = jnp.maximum(0.0, s - (warmup_steps + stable_steps))
+        frac = jnp.minimum(1.0, in_decay / jnp.maximum(1, decay_steps))
+        decay_mult = final_frac ** frac          # 1 -> final_frac
+        return jnp.where(s < warmup_steps, warm, peak * decay_mult)
+
+    return fn
+
+
+def cosine_schedule(peak: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1):
+    def fn(step):
+        s = jnp.asarray(step, jnp.float32)
+        warm = peak * jnp.minimum(1.0, s / jnp.maximum(1, warmup_steps))
+        prog = jnp.clip((s - warmup_steps) /
+                        jnp.maximum(1, total_steps - warmup_steps), 0.0, 1.0)
+        cos = final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return jnp.where(s < warmup_steps, warm, peak * cos)
+
+    return fn

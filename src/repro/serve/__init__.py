@@ -1,0 +1,6 @@
+from repro.serve.engine import (DecodeCache, init_decode_cache, prefill,
+                                decode_step)
+from repro.serve.batcher import RequestBatcher, Request
+
+__all__ = ["DecodeCache", "init_decode_cache", "prefill", "decode_step",
+           "RequestBatcher", "Request"]

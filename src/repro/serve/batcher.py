@@ -1,0 +1,66 @@
+"""Request batching for the serving path (paper §5.2.4 host-side queueing).
+
+The paper enqueues multiple OpenCL kernels out-of-order to keep the fabric
+busy; here a ``RequestBatcher`` packs incoming prompts into fixed-shape
+decode batches (continuous batching, slot-based): finished slots are
+recycled without recompiling, because the decode step is shape-stable.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Callable
+
+import numpy as np
+
+
+@dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray            # (prompt_len,) int32
+    max_new_tokens: int
+    generated: list = field(default_factory=list)
+    done: bool = False
+
+
+class RequestBatcher:
+    """Slot-based continuous batcher over a fixed decode batch size."""
+
+    def __init__(self, batch_size: int, eos_id: int = -1):
+        self.batch_size = batch_size
+        self.eos_id = eos_id
+        self.slots: list[Request | None] = [None] * batch_size
+        self.queue: list[Request] = []
+        self.finished: list[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> list[tuple[int, Request]]:
+        """Fill empty slots from the queue; returns newly admitted."""
+        admitted = []
+        for i in range(self.batch_size):
+            if self.slots[i] is None and self.queue:
+                req = self.queue.pop(0)
+                self.slots[i] = req
+                admitted.append((i, req))
+        return admitted
+
+    def active_mask(self) -> np.ndarray:
+        return np.array([s is not None for s in self.slots], dtype=bool)
+
+    def record_tokens(self, tokens: np.ndarray) -> None:
+        """tokens: (batch,) next token per slot; retire finished slots."""
+        for i, req in enumerate(self.slots):
+            if req is None:
+                continue
+            tok = int(tokens[i])
+            req.generated.append(tok)
+            if (tok == self.eos_id or
+                    len(req.generated) >= req.max_new_tokens):
+                req.done = True
+                self.finished.append(req)
+                self.slots[i] = None
+
+    @property
+    def idle(self) -> bool:
+        return not self.queue and all(s is None for s in self.slots)

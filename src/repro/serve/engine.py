@@ -1,0 +1,279 @@
+"""Serving: per-family decode caches, prefill, and single-token decode.
+
+Cache layouts (batch is always sharded over ('pod','data')):
+
+  dense/moe/vlm : KV (L, B, C, Hk, hd) — C = min(context, window or ctx).
+                  When kv_heads < |model| the cache C axis is sharded over
+                  'model' (sequence-sharded decode; see attention.py).
+  ssm           : state (L, B, H, P, N) + conv carry (L, B, W-1, CH) — O(1).
+  hybrid        : KV stack over attention layers only + RG-LRU h-state and
+                  conv carries over recurrent layers.
+  audio         : encoder-only — no decode (asserted).
+
+``prefill`` runs the full forward once and materializes every layer's cache;
+``decode_step`` advances one token. Both are pure jit-able functions of
+(params, cache, tokens) so the dry-run lowers them directly.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import attention as attn
+from repro.models import mamba2, moe, rglru
+from repro.models.attention import KVCache
+from repro.models.config import ModelConfig
+from repro.models.layers import rms_norm, swiglu, gelu_mlp
+from repro.models.pspec_utils import constrain
+from repro.models.transformer import (_cdtype, _rec_mix, _ssm_mix,
+                                      iter_layer_params, layer_kinds,
+                                      embed_inputs, lm_logits)
+
+
+class DecodeCache(NamedTuple):
+    kv_k: Any = None          # (La, B, C, Hk, hd)
+    kv_v: Any = None
+    ssm_state: Any = None     # (Ls, B, H, P, N)
+    conv_carry: Any = None    # (Ls, B, W-1, CH)
+    rec_h: Any = None         # (Lr, B, D_rnn)
+    rec_conv: Any = None      # (Lr, B, W-1, D_rnn)
+    length: jnp.ndarray = None  # () int32 tokens so far
+
+
+def cache_capacity(cfg: ModelConfig, context: int) -> int:
+    if cfg.sliding_window:
+        return min(context, cfg.sliding_window)
+    if cfg.family == "hybrid" and cfg.local_window:
+        return min(context, cfg.local_window)
+    return context
+
+
+def init_decode_cache(cfg: ModelConfig, batch: int, context: int
+                      ) -> DecodeCache:
+    assert not cfg.is_encoder, f"{cfg.name} is encoder-only: no decode"
+    dt = _cdtype(cfg)
+    hd = cfg.resolved_head_dim
+    cap = cache_capacity(cfg, context)
+    kinds = layer_kinds(cfg)
+    n_attn = sum(1 for k in kinds if k in ("dense", "moe"))
+    n_ssm = sum(1 for k in kinds if k == "ssm")
+    n_rec = sum(1 for k in kinds if k == "rec")
+    kw: dict[str, Any] = {"length": jnp.zeros((), jnp.int32)}
+    if n_attn:
+        shape = (n_attn, batch, cap, cfg.n_kv_heads, hd)
+        kw["kv_k"] = jnp.zeros(shape, dt)
+        kw["kv_v"] = jnp.zeros(shape, dt)
+    if n_ssm:
+        d_in, nh, p, n = mamba2.ssm_dims(cfg)
+        kw["ssm_state"] = jnp.zeros((n_ssm, batch, nh, p, n), jnp.float32)
+        kw["conv_carry"] = jnp.zeros(
+            (n_ssm, batch, cfg.ssm_conv_width - 1, d_in + 2 * n), dt)
+    if n_rec:
+        d_rnn = cfg.n_heads * hd
+        kw["rec_h"] = jnp.zeros((n_rec, batch, d_rnn), jnp.float32)
+        kw["rec_conv"] = jnp.zeros(
+            (n_rec, batch, cfg.ssm_conv_width - 1, d_rnn), dt)
+    return DecodeCache(**kw)
+
+
+# ---------------------------------------------------------------------------
+# per-kind single-token block steps
+# ---------------------------------------------------------------------------
+
+def _attn_block_step(p, x, cfg, kv: KVCache, window: int):
+    h = rms_norm(x, p["attn_norm"])
+    h, kv = attn.attention_decode(p, h, cfg, kv, window=window)
+    x = x + h
+    h = rms_norm(x, p["mlp_norm"])
+    if cfg.family == "audio":
+        h = gelu_mlp(h, p["w_in"], p["w_out"])
+    elif "w_router" in p:
+        h = moe.moe_forward(p, h, cfg)
+    else:
+        h = swiglu(h, p["w_gate"], p["w_up"], p["w_down"])
+    return x + h, kv
+
+
+def _ssm_block_step(p, x, cfg, state, carry):
+    """x (B, 1, D). Single-token SSD step."""
+    b = x.shape[0]
+    d_in, nh, hp, n = mamba2.ssm_dims(cfg)
+    h = rms_norm(x, p["norm"])
+    zxbcdt = h @ p["in_proj"].astype(h.dtype)
+    z, xin, bmat, cmat, dt = jnp.split(
+        zxbcdt, [d_in, 2 * d_in, 2 * d_in + n, 2 * d_in + 2 * n], axis=-1)
+    conv_in = jnp.concatenate([xin, bmat, cmat], axis=-1)
+    conv_out, carry = rglru.temporal_conv(
+        {"conv_w": p["conv_w"]}, conv_in, cfg.ssm_conv_width, carry)
+    conv_out = jax.nn.silu(conv_out.astype(jnp.float32)).astype(h.dtype)
+    xin, bmat, cmat = jnp.split(conv_out, [d_in, d_in + n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) +
+                         p["dt_bias"].astype(jnp.float32))
+    y, state = mamba2.ssd_decode_step(
+        xin[:, 0].reshape(b, nh, hp), dt[:, 0], p["a_log"],
+        bmat[:, 0], cmat[:, 0], state)
+    y = y + xin[:, 0].reshape(b, nh, hp).astype(jnp.float32) * \
+        p["skip_d"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(b, 1, d_in).astype(x.dtype)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)
+    y = rms_norm(y, p["out_norm"])
+    return x + y @ p["out_proj"].astype(x.dtype), state, carry
+
+
+def _rec_block_step(p, x, cfg, h_state, carry):
+    h = rms_norm(x, p["attn_norm"])
+    gate = jax.nn.gelu((h @ p["gate_proj"].astype(h.dtype)
+                        ).astype(jnp.float32)).astype(h.dtype)
+    u = h @ p["rnn_proj"].astype(h.dtype)
+    u, carry = rglru.temporal_conv({"conv_w": p["conv_w"]}, u,
+                                   cfg.ssm_conv_width, carry)
+    lru_p = {k: p[k] for k in ("w_a", "b_a", "w_x", "b_x", "lam")}
+    h_state = rglru.rglru_step(lru_p, u[:, 0], h_state, cfg.rglru_c)
+    y = (gate * h_state[:, None].astype(gate.dtype)) @ \
+        p["out_proj"].astype(x.dtype)
+    x = x + y
+    h = rms_norm(x, p["mlp_norm"])
+    return x + swiglu(h, p["w_gate"], p["w_up"], p["w_down"]), h_state, carry
+
+
+# ---------------------------------------------------------------------------
+# decode_step
+# ---------------------------------------------------------------------------
+
+def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
+                cache: DecodeCache) -> tuple[jnp.ndarray, DecodeCache]:
+    """tokens (B, 1) -> (logits (B, 1, V), new cache)."""
+    cdt = _cdtype(cfg)
+    x = constrain(params["embed"].astype(cdt)[tokens], "dp", None, None)
+    kinds = layer_kinds(cfg)
+    window = cfg.sliding_window or (
+        cfg.local_window if cfg.family == "hybrid" else 0)
+
+    if "blocks" in params and kinds[0] in ("dense", "moe"):
+        # homogeneous attention stack: scan over (params, kv) slices
+        def body(carry, inp):
+            x, length = carry
+            lp, k_l, v_l = inp
+            kv = KVCache(k=k_l, v=v_l, length=length)
+            x, kv = _attn_block_step(lp, x, cfg, kv, window)
+            return (x, length), (kv.k, kv.v)
+
+        (x, _), (new_k, new_v) = jax.lax.scan(
+            body, (x, cache.length),
+            (params["blocks"], cache.kv_k, cache.kv_v))
+        cache = cache._replace(kv_k=new_k, kv_v=new_v,
+                               length=cache.length + 1)
+    elif "blocks" in params and kinds[0] == "ssm":
+        def body(x, inp):
+            lp, st, cv = inp
+            x, st, cv = _ssm_block_step(lp, x, cfg, st, cv)
+            return x, (st, cv)
+
+        x, (new_st, new_cv) = jax.lax.scan(
+            body, x, (params["blocks"], cache.ssm_state, cache.conv_carry))
+        cache = cache._replace(ssm_state=new_st, conv_carry=new_cv,
+                               length=cache.length + 1)
+    else:
+        # heterogeneous (hybrid): python loop with per-kind counters
+        ia = isym = irec = 0
+        new_k, new_v = [], []
+        new_h, new_rc = [], []
+        for lp, kind in zip(iter_layer_params(params, cfg), kinds):
+            if kind in ("dense", "moe"):
+                kv = KVCache(k=cache.kv_k[ia], v=cache.kv_v[ia],
+                             length=cache.length)
+                x, kv = _attn_block_step(lp, x, cfg, kv, window)
+                new_k.append(kv.k)
+                new_v.append(kv.v)
+                ia += 1
+            elif kind == "rec":
+                x, h_state, carry = _rec_block_step(
+                    lp, x, cfg, cache.rec_h[irec], cache.rec_conv[irec])
+                new_h.append(h_state)
+                new_rc.append(carry)
+                irec += 1
+        cache = cache._replace(
+            kv_k=jnp.stack(new_k) if new_k else cache.kv_k,
+            kv_v=jnp.stack(new_v) if new_v else cache.kv_v,
+            rec_h=jnp.stack(new_h) if new_h else cache.rec_h,
+            rec_conv=jnp.stack(new_rc) if new_rc else cache.rec_conv,
+            length=cache.length + 1)
+
+    x = rms_norm(x, params["final_norm"])
+    return lm_logits(params, cfg, x), cache
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+def prefill(params, cfg: ModelConfig, batch, context: int
+            ) -> tuple[jnp.ndarray, DecodeCache]:
+    """Full forward over the prompt; returns (logits, populated cache)."""
+    x, positions = embed_inputs(params, cfg, batch)
+    x = constrain(x, "dp", None, None)
+    b, s = x.shape[:2]
+    cap = cache_capacity(cfg, context)
+    kinds = layer_kinds(cfg)
+    window = cfg.sliding_window or (
+        cfg.local_window if cfg.family == "hybrid" else 0)
+
+    if "blocks" in params and kinds[0] in ("dense", "moe"):
+        def body(x, lp):
+            h = rms_norm(x, lp["attn_norm"])
+            h, kv = attn.prefill_cache(lp, h, cfg, cap, positions=positions,
+                                       window=window)
+            x = x + h
+            h = rms_norm(x, lp["mlp_norm"])
+            if "w_router" in lp:
+                h = moe.moe_forward(lp, h, cfg)
+            else:
+                h = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+            return x + h, (kv.k, kv.v)
+
+        x, (ks, vs) = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(kv_k=ks, kv_v=vs,
+                            length=jnp.asarray(s, jnp.int32))
+    elif "blocks" in params and kinds[0] == "ssm":
+        def body(x, lp):
+            h = rms_norm(x, lp["norm"])
+            y, carry, state = _ssm_mix(lp, h, cfg)
+            return x + y, (state, carry)
+
+        x, (sts, cvs) = jax.lax.scan(body, x, params["blocks"])
+        cache = DecodeCache(ssm_state=sts, conv_carry=cvs,
+                            length=jnp.asarray(s, jnp.int32))
+    else:
+        ks, vs, hs, rcs = [], [], [], []
+        for lp, kind in zip(iter_layer_params(params, cfg), kinds):
+            if kind in ("dense", "moe"):
+                h = rms_norm(x, lp["attn_norm"])
+                h, kv = attn.prefill_cache(lp, h, cfg, cap,
+                                           positions=positions, window=window)
+                x = x + h
+                h = rms_norm(x, lp["mlp_norm"])
+                if "w_router" in lp:
+                    h = moe.moe_forward(lp, h, cfg)
+                else:
+                    h = swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+                x = x + h
+                ks.append(kv.k)
+                vs.append(kv.v)
+            elif kind == "rec":
+                h = rms_norm(x, lp["attn_norm"])
+                y, carry, h_last = _rec_mix(lp, h, cfg)
+                x = x + y
+                h = rms_norm(x, lp["mlp_norm"])
+                x = x + swiglu(h, lp["w_gate"], lp["w_up"], lp["w_down"])
+                hs.append(h_last)
+                rcs.append(carry)
+        cache = DecodeCache(
+            kv_k=jnp.stack(ks) if ks else None,
+            kv_v=jnp.stack(vs) if vs else None,
+            rec_h=jnp.stack(hs) if hs else None,
+            rec_conv=jnp.stack(rcs) if rcs else None,
+            length=jnp.asarray(s, jnp.int32))
+    x = rms_norm(x, params["final_norm"])
+    return lm_logits(params, cfg, x), cache

@@ -1,0 +1,6 @@
+from repro.train.trainer import Trainer, TrainConfig, make_train_step
+from repro.train.checkpoint import CheckpointManager
+from repro.train.resilience import StragglerMonitor, Heartbeat, PreemptionGuard
+
+__all__ = ["Trainer", "TrainConfig", "make_train_step", "CheckpointManager",
+           "StragglerMonitor", "Heartbeat", "PreemptionGuard"]

@@ -1,0 +1,232 @@
+"""Sharding rules: FSDP ('data') x TP ('model'), pod-replicated params.
+
+Posture (DESIGN.md §5): the 'pod' axis carries only data parallelism whose
+gradient all-reduce is the single cross-pod (DCN-class) collective; 'data'
+carries FSDP (params/optimizer sharded, weights all-gathered on use);
+'model' carries tensor parallelism (Megatron column/row) plus
+sequence-sharded KV during decode.
+
+Per-leaf rules are by parameter *name* (names are globally unique across
+families). A dim is sharded only when divisible by the axis size —
+``_shard_if`` degrades to replication otherwise (e.g. batch=1 long_500k).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# name -> per-dim logical axes for the UNSTACKED (single-layer) shape.
+# 'fsdp' -> 'data', 'tp' -> 'model', None -> replicated.
+_RULES: dict[str, tuple] = {
+    # embeddings / heads
+    "embed": ("tp", "fsdp"),            # (V, D)
+    "lm_head": ("fsdp", "tp"),          # (D, V)
+    "head": ("fsdp", "tp"),             # (D, V) audio
+    "frontend_proj": (None, "fsdp"),    # (frontend, D)
+    # attention
+    "wq": ("fsdp", "tp"), "wk": ("fsdp", "tp"), "wv": ("fsdp", "tp"),
+    "wo": ("tp", "fsdp"),
+    "q_norm": (None,), "k_norm": (None,),
+    # dense mlp
+    "w_in": ("fsdp", "tp"), "w_out": ("tp", "fsdp"),
+    "w_gate": ("fsdp", "tp"), "w_up": ("fsdp", "tp"),
+    "w_down": ("tp", "fsdp"),
+    # moe (E, D, F) / (E, F, D): experts replicated, TP on F, FSDP on D
+    "w_router": ("fsdp", None),
+    # ssm
+    "in_proj": ("fsdp", "tp"), "conv_w": (None, "tp"),
+    "dt_bias": ("tp",), "a_log": ("tp",), "skip_d": ("tp",),
+    "out_norm": ("tp",), "out_proj": ("tp", "fsdp"),
+    # rglru (hybrid)
+    "gate_proj": ("fsdp", "tp"), "rnn_proj": ("fsdp", "tp"),
+    "w_a": (None, "tp"), "b_a": ("tp",), "w_x": (None, "tp"),
+    "b_x": ("tp",), "lam": ("tp",),
+    # norms
+    "attn_norm": (None,), "mlp_norm": (None,), "norm": (None,),
+    "final_norm": (None,),
+}
+
+_MOE_3D = {"w_gate": (None, "fsdp", "tp"), "w_up": (None, "fsdp", "tp"),
+           "w_down": (None, "tp", "fsdp")}
+
+
+def _axis(mesh: Mesh, logical: str | None) -> str | None:
+    if logical is None:
+        return None
+    name = {"fsdp": "data", "tp": "model"}[logical]
+    return name if name in mesh.axis_names else None
+
+
+def _shard_if(mesh: Mesh, dim: int, axis: str | None):
+    """Shard only when divisible; otherwise replicate this dim."""
+    if axis is None or axis not in mesh.axis_names:
+        return None
+    if dim % mesh.shape[axis] != 0:
+        return None
+    return axis
+
+
+def leaf_pspec(mesh: Mesh, name: str, shape: tuple, stacked: bool) -> P:
+    ndim = len(shape)
+    body_shape = shape[1:] if stacked else shape
+    rule = _RULES.get(name)
+    if rule is not None and len(rule) != len(body_shape) and name in _MOE_3D:
+        rule = None
+    if name in _MOE_3D and len(body_shape) == 3:
+        rule = _MOE_3D[name]
+    if rule is None or len(rule) != len(body_shape):
+        rule = (None,) * len(body_shape)
+    axes = [_shard_if(mesh, d, _axis(mesh, r))
+            for d, r in zip(body_shape, rule)]
+    if stacked:
+        axes = [None] + axes
+    return P(*axes)
+
+
+def param_pspecs(cfg, mesh: Mesh, shapes: Any, decode: bool = False) -> Any:
+    """PartitionSpec pytree matching ``param_spec``-built params.
+
+    cfg.tensor_parallel=False drops every 'model'-axis placement (params
+    replicated across 'model'; the batch occupies it instead).
+
+    decode=True lays the embedding out (D -> 'model') instead of
+    (V -> 'model', D -> 'data'): a token gather over a vocab-sharded table
+    triggers SPMD's involuntary full rematerialization every step; the
+    D-sharded layout makes the lookup collective-free (§Perf)."""
+
+    def strip_model(spec: P) -> P:
+        return P(*[None if a == "model" else a for a in spec])
+
+    def walk(node, name=None, stacked=False):
+        if isinstance(node, dict):
+            return {k: walk(v, k, stacked or k in ("blocks", "groups"))
+                    for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, name, stacked and name != "tail")
+                    for v in node]
+        if decode and name == "embed":
+            spec = P(None, _shard_if(mesh, node.shape[-1], "model"))
+        else:
+            spec = leaf_pspec(mesh, name, tuple(node.shape), stacked)
+        return spec if cfg.tensor_parallel else strip_model(spec)
+
+    return walk(shapes)
+
+
+def param_shardings(cfg, mesh: Mesh, shapes: Any,
+                    decode: bool = False) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        param_pspecs(cfg, mesh, shapes, decode=decode),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def moment_pspecs(cfg, mesh: Mesh, shapes: Any) -> Any:
+    """Optimizer-moment specs: param spec + ZeRO-style 'pod' sharding.
+
+    Moments are touched only at the update, never in fwd/bwd, so sharding
+    them over the pod axis (on the leading stacked dim, which params keep
+    replicated for the scan) costs no hot-path collectives and halves the
+    per-device optimizer footprint on the 2-pod mesh."""
+    base = param_pspecs(cfg, mesh, shapes)
+
+    def walk(node, spec):
+        if isinstance(node, dict):
+            return {k: walk(v, spec[k]) for k, v in node.items()}
+        if isinstance(node, list):
+            return [walk(v, s) for v, s in zip(node, spec)]
+        parts = list(spec) + [None] * (len(node.shape) - len(spec))
+        if "pod" in mesh.axis_names:
+            for i, (dim, p) in enumerate(zip(node.shape, parts)):
+                if p is None and dim % mesh.shape["pod"] == 0:
+                    parts[i] = "pod"
+                    break
+        return P(*parts)
+
+    return walk(shapes, base)
+
+
+def moment_shardings(cfg, mesh: Mesh, shapes: Any) -> Any:
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        moment_pspecs(cfg, mesh, shapes),
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def dp_axes(mesh: Mesh, include_model: bool = False) -> tuple:
+    names = ("pod", "data", "model") if include_model else ("pod", "data")
+    return tuple(a for a in names if a in mesh.axis_names)
+
+
+def batch_pspec(mesh: Mesh, batch_size: int, ndim: int,
+                include_model: bool = False) -> P:
+    """Shard the leading batch dim over the longest divisible DP-axis
+    prefix (e.g. batch 32 on ('pod','data','model') falls back to
+    ('pod','data'), then ('pod',), then replication)."""
+    axes = dp_axes(mesh, include_model)
+    best, best_total = None, 1
+    for i in range(len(axes)):
+        for j in range(i + 1, len(axes) + 1):
+            sub = axes[i:j]
+            total = int(np.prod([mesh.shape[a] for a in sub]))
+            if batch_size % total == 0 and total > best_total:
+                best, best_total = sub, total
+    if best:
+        return P(best, *([None] * (ndim - 1)))
+    return P(*([None] * ndim))
+
+
+def batch_shardings(mesh: Mesh, batch_specs: dict,
+                    include_model: bool = False) -> dict:
+    return {k: NamedSharding(mesh, batch_pspec(mesh, v.shape[0],
+                                               len(v.shape), include_model))
+            for k, v in batch_specs.items()}
+
+
+def cache_pspecs(cfg, mesh: Mesh, cache_shapes) -> Any:
+    """DecodeCache shardings: batch -> (pod,data); heads/C -> 'model'.
+
+    KV (L, B, C, Hk, hd): when Hk divides |model| shard heads, else shard
+    the *cache sequence* C over 'model' (sequence-sharded decode; the
+    explicit-softmax decode path turns this into local partials + a small
+    AllReduce). SSM state (L, B, H, P, N): H over 'model'. RG-LRU h
+    (L, B, D_rnn): D_rnn over 'model'.
+    """
+    model = mesh.shape.get("model", 1)
+
+    def spec(path_name, shape):
+        nd = len(shape)
+        if path_name in ("kv_k", "kv_v"):
+            b_axes = batch_pspec(mesh, shape[1], 1)[0]
+            if cfg.n_kv_heads % model == 0:
+                return P(None, b_axes, None,
+                         _shard_if(mesh, shape[3], "model"), None)
+            return P(None, b_axes, _shard_if(mesh, shape[2], "model"),
+                     None, None)
+        if path_name == "ssm_state":
+            return P(None, batch_pspec(mesh, shape[1], 1)[0],
+                     _shard_if(mesh, shape[2], "model"), None, None)
+        if path_name == "conv_carry":
+            return P(None, batch_pspec(mesh, shape[1], 1)[0], None,
+                     _shard_if(mesh, shape[3], "model"))
+        if path_name == "rec_h":
+            return P(None, batch_pspec(mesh, shape[1], 1)[0],
+                     _shard_if(mesh, shape[2], "model"))
+        if path_name == "rec_conv":
+            return P(None, batch_pspec(mesh, shape[1], 1)[0], None,
+                     _shard_if(mesh, shape[3], "model"))
+        if path_name == "length":
+            return P()
+        return P(*([None] * nd))
+
+    fields = cache_shapes._asdict()
+    return type(cache_shapes)(**{
+        k: (None if v is None else spec(k, tuple(v.shape)))
+        for k, v in fields.items()})
+
+
+def cache_shardings(cfg, mesh: Mesh, cache_shapes) -> Any:
+    specs = cache_pspecs(cfg, mesh, cache_shapes)
+    return jax.tree.map(lambda s: NamedSharding(mesh, s),
+                        specs, is_leaf=lambda x: isinstance(x, P))

@@ -1,0 +1,13 @@
+import os
+
+# Tests run on the single host device; the dry-run (and only the dry-run)
+# forces 512 devices in its own process.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,88 @@
+"""Cost model (eqs. 2-23), simulator, and binary-search optimizer."""
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel, FfclStats, n_subkernels
+from repro.core.gate_ir import random_graph
+from repro.core.optimizer import binary_search, sweep
+from repro.core.scheduler import compile_graph
+from repro.core.simulator import simulate_no_pipeline, simulate_pipeline
+
+
+@pytest.fixture(scope="module")
+def workload():
+    rng = np.random.default_rng(3)
+    g = random_graph(rng, 64, 3000, 32, locality=256)
+    return g, FfclStats.from_graph(g)
+
+
+def test_u_shape(workload):
+    _, stats = workload
+    model = CostModel()
+    layers = [(stats, 16, 4096)]
+    costs = [model.network_cycles(layers, 2 ** k) for k in range(0, 13)]
+    best = int(np.argmin(costs))
+    assert 0 < best < 12, "latency vs n_unit must be interior-minimized"
+    # rising tail and falling head (paper Fig. 6 Pareto shape)
+    assert costs[0] > costs[best]
+    assert costs[-1] > costs[best]
+
+
+def test_binary_search_matches_sweep(workload):
+    _, stats = workload
+    model = CostModel()
+    layers = [(stats, 16, 4096)]
+    res = binary_search(model, layers, n_unit_max=4096)
+    swp = sweep(model, layers, list(range(1, 513, 7)))
+    assert res.best_cycles <= swp.best_cycles * 1.05
+    # binary search probes O(log) points, not the whole range
+    assert len(res.evaluations) < 60
+
+
+def test_pipeline_beats_sequential(workload):
+    g, _ = workload
+    progs = [compile_graph(g, n_unit=64) for _ in range(8)]
+    pipe = simulate_pipeline(progs, n_input_vectors=4096)
+    seq = simulate_no_pipeline(progs, n_input_vectors=4096)
+    assert pipe.total_cycles <= seq.total_cycles
+    # eq. 2 upper-bounds the pipelined sim (same max-term structure)
+    model = CostModel()
+    stats = FfclStats.from_graph(g)
+    bound = model.total_cycles(stats, 64, 4096, m_modules=8)
+    assert pipe.total_cycles <= bound * 1.01
+
+
+def test_model_error_shrinks_with_m(workload):
+    """Paper Fig. 6: <10% model-vs-actual error. Our 'actual' is the
+    discrete-event simulator; the worst-case-occupancy model converges as
+    the number of pipelined modules grows."""
+    g, stats = workload
+    model = CostModel()
+    prog = compile_graph(g, n_unit=64)
+    errs = {}
+    for m in (2, 64):
+        sim = simulate_pipeline([prog] * m, n_input_vectors=4096)
+        mdl = model.total_cycles(stats, 64, 4096, m_modules=m)
+        errs[m] = abs(mdl - sim.total_cycles) / sim.total_cycles
+    assert errs[64] < errs[2]
+    assert errs[64] < 0.35
+
+
+def test_eq23(workload):
+    g, stats = workload
+    for u in (1, 7, 64, 4096):
+        assert n_subkernels(stats, u) == compile_graph(g, n_unit=u).n_steps
+
+
+def test_breakdown_bound_shares(workload):
+    """Paper Fig. 7: the data-movement share of the pipeline grows with the
+    number of units (address streams scale with n_unit x n_subkernels),
+    while few units are compute-dominated."""
+    _, stats = workload
+    model = CostModel()
+    b_small = model.breakdown(stats, 4, 4096)
+    b_large = model.breakdown(stats, 4096, 4096)
+    assert b_small.bound == "compute"       # few units -> compute-dominated
+    share_small = b_small.n_data_moves / b_small.n_compute
+    share_large = b_large.n_data_moves / b_large.n_compute
+    assert share_large > share_small

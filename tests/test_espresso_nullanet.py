@@ -1,0 +1,95 @@
+"""Two-level minimization + NullaNet conversion (paper §7)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import espresso
+from repro.core.nullanet import (BinaryMLPConfig, layer_to_graph,
+                                 mlp_accuracy, mlp_to_logic_network,
+                                 neuron_enumerated, neuron_isf,
+                                 train_binary_mlp)
+from repro.data import make_binary_classification
+
+
+def all_patterns(n):
+    return ((np.arange(2 ** n)[:, None] >> np.arange(n)[None, :]) & 1
+            ).astype(np.uint8)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(2, 9))
+def test_minimize_exact_function(seed, v):
+    """Complete truth table: SOP must equal the function everywhere."""
+    rng = np.random.default_rng(seed)
+    pats = all_patterns(v)
+    f = rng.integers(0, 2, 2 ** v).astype(bool)
+    cubes = espresso.minimize(pats[f], pats[~f])
+    assert espresso.check_cover(cubes, pats[f], pats[~f])
+    assert (espresso.eval_sop(cubes, pats) == f).all()
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.integers(4, 24))
+def test_minimize_isf_with_dont_cares(seed, v):
+    """Sampled ISF: cover on-set, avoid off-set; DC may go either way."""
+    rng = np.random.default_rng(seed)
+    n = min(200, 2 ** v)
+    samples = rng.integers(0, 2, (n, v)).astype(np.uint8)
+    samples = np.unique(samples, axis=0)
+    f = rng.integers(0, 2, samples.shape[0]).astype(bool)
+    cubes = espresso.minimize(samples[f], samples[~f])
+    assert espresso.check_cover(cubes, samples[f], samples[~f])
+
+
+def test_minimize_fewer_cubes_than_minterms():
+    # AND function: 1 minterm in on-set per assignment; espresso finds 1 cube
+    pats = all_patterns(6)
+    f = pats.all(axis=1)
+    cubes = espresso.minimize(pats[f], pats[~f])
+    assert len(cubes) == 1
+
+
+def test_neuron_enumerated_matches_threshold():
+    rng = np.random.default_rng(0)
+    w = rng.normal(size=8)
+    b = 0.3
+    x_on, x_off = neuron_enumerated(w, b)
+    assert x_on.shape[0] + x_off.shape[0] == 2 ** 8
+    got = ((2.0 * x_on - 1) @ w + b >= 0)
+    assert got.all()
+
+
+def test_neuron_isf_consistent():
+    rng = np.random.default_rng(0)
+    x = rng.integers(0, 2, (500, 16)).astype(np.uint8)
+    w = rng.normal(size=16)
+    x_on, x_off = neuron_isf(x, w, -0.1)
+    # no pattern in both sets
+    on = {tuple(r) for r in x_on}
+    off = {tuple(r) for r in x_off}
+    assert not (on & off)
+
+
+def test_layer_to_graph_exact_on_observed():
+    rng = np.random.default_rng(1)
+    x = rng.integers(0, 2, (300, 12)).astype(np.uint8)
+    W = rng.normal(size=(12, 5)).astype(np.float32)
+    b = rng.normal(size=5).astype(np.float32) * 0.1
+    g = layer_to_graph(x, W, b, mode="isf")
+    got = g.evaluate(x.astype(bool))
+    want = ((2.0 * x - 1.0) @ W + b) >= 0
+    assert (got == want).all()   # ISF construction is exact on observed
+
+
+@pytest.mark.slow
+def test_nullanet_end_to_end_accuracy():
+    x, y = make_binary_classification(2000, 24, n_classes=3, noise=0.05)
+    xt, yt, xv, yv = x[:1500], y[:1500], x[1500:], y[1500:]
+    cfg = BinaryMLPConfig(n_features=24, hidden=(16, 12), n_classes=3)
+    params = train_binary_mlp(cfg, xt, yt, steps=200)
+    acc_mlp = mlp_accuracy(params, cfg, xv, yv)
+    net = mlp_to_logic_network(params, cfg, xt, mode="isf")
+    acc_logic = (net.predict(xv) == yv).mean()
+    # paper §2: binary-implementation accuracy drop < 4%
+    assert acc_mlp > 0.9
+    assert acc_mlp - acc_logic < 0.04

@@ -1,0 +1,119 @@
+"""Gate IR + Verilog front-end + the paper's §6.3 worked examples."""
+import numpy as np
+import pytest
+
+from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, random_graph
+from repro.core.levelize import levelize
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.verilog import emit_verilog, parse_verilog
+
+
+def all_patterns(n):
+    return ((np.arange(2 ** n)[:, None] >> np.arange(n)[None, :]) & 1
+            ).astype(bool)
+
+
+def test_g1_paper_example():
+    """Paper Fig. 4 / Table 2: 4-input AND via three 2-input ANDs."""
+    g = LogicGraph(4, name="g1")
+    w1 = g.add_gate(OpCode.AND, g.input_wire(0), g.input_wire(1))
+    w2 = g.add_gate(OpCode.AND, g.input_wire(2), g.input_wire(3))
+    out = g.add_gate(OpCode.AND, w1, w2)
+    g.set_outputs([out])
+    lv = levelize(g)
+    assert lv.depth == 2
+    assert list(lv.histogram()) == [2, 1]
+    # schedule on 2 units: 2 sub-kernels, second one half-NOP (paper: [AND,NOP])
+    prog = compile_graph(g, n_unit=2)
+    assert prog.n_steps == 2
+    assert prog.opcode[0].tolist() == [int(OpCode.AND)] * 2
+    assert prog.opcode[1].tolist() == [int(OpCode.AND), int(OpCode.NOP)]
+    X = all_patterns(4)
+    expected = X.all(axis=1, keepdims=True)
+    assert (g.evaluate(X) == expected).all()
+    assert (execute_program_np(prog, X) == expected).all()
+
+
+def test_g2_paper_example():
+    """Paper Fig. 5 / Table 3: the 4-input, 3-level function g2."""
+    g = LogicGraph(4, name="g2")  # inputs a,b,c,d -> wires 2..5
+    a, b, c, d = (g.input_wire(i) for i in range(4))
+    w1 = g.add_gate(OpCode.XOR, b, c)
+    w2 = g.add_gate(OpCode.XOR, b, a)
+    w3 = g.add_gate(OpCode.AND, d, a)
+    w4 = g.add_gate(OpCode.OR, d, c)
+    w5 = g.add_gate(OpCode.XOR, w1, w3)
+    w6 = g.add_gate(OpCode.AND, w2, w4)
+    out = g.add_gate(OpCode.AND, w6, w5)
+    g.set_outputs([out])
+    lv = levelize(g)
+    assert lv.depth == 3
+    assert list(lv.histogram()) == [4, 2, 1]
+    # two units (paper): level1 -> 2 sub-kernels, levels 2,3 -> 1 each = 4
+    prog = compile_graph(g, n_unit=2)
+    assert prog.n_steps == 4  # paper: "completed within ... 4 cycles"
+    X = all_patterns(4)
+    av, bv, cv, dv = X.T
+    expected = (((bv ^ av) & (dv | cv)) & ((bv ^ cv) ^ (dv & av)))[:, None]
+    assert (g.evaluate(X) == expected).all()
+    assert (execute_program_np(prog, X) == expected).all()
+
+
+def test_constants_and_unary():
+    g = LogicGraph(1)
+    n = g.add_gate(OpCode.NOT, g.input_wire(0))
+    o = g.add_gate(OpCode.OR, n, CONST1)
+    x = g.add_gate(OpCode.XOR, o, CONST0)
+    g.set_outputs([n, o, x])
+    X = np.array([[0], [1]], dtype=bool)
+    out = g.evaluate(X)
+    assert (out[:, 0] == ~X[:, 0]).all()
+    assert out[:, 1].all() and out[:, 2].all()
+
+
+def test_topological_enforcement():
+    g = LogicGraph(2)
+    with pytest.raises(ValueError):
+        g.add_gate(OpCode.AND, 0, 99)
+
+
+def test_verilog_roundtrip(rng):
+    for _ in range(5):
+        g = random_graph(rng, 6, 60, 4)
+        g2 = parse_verilog(emit_verilog(g))
+        X = rng.integers(0, 2, (64, 6)).astype(bool)
+        assert (g.evaluate(X) == g2.evaluate(X)).all()
+
+
+def test_verilog_expressions():
+    src = """
+    // comment
+    module m(a, b, c, y, z);
+      input a, b, c; output y, z; wire w1;
+      and g0 (w1, a, b);
+      assign y = ~(w1 ^ c) | (a & 1'b1);
+      nor g1 (z, w1, c);
+    endmodule
+    """
+    g = parse_verilog(src)
+    X = ((np.arange(8)[:, None] >> np.arange(3)) & 1).astype(bool)
+    a, b, c = X.T
+    w1 = a & b
+    out = g.evaluate(X)
+    assert (out[:, 0] == (~(w1 ^ c) | a)).all()
+    assert (out[:, 1] == ~(w1 | c)).all()
+
+
+def test_out_of_order_netlist():
+    src = """
+    module m(a, b, y);
+      input a, b; output y; wire w1, w2;
+      and g1 (y, w1, w2);      // uses wires defined later
+      not g2 (w1, a);
+      or  g3 (w2, a, b);
+    endmodule
+    """
+    g = parse_verilog(src)
+    X = np.array([[0, 0], [0, 1], [1, 0], [1, 1]], dtype=bool)
+    a, b = X.T
+    assert (g.evaluate(X)[:, 0] == (~a & (a | b))).all()

@@ -1,0 +1,96 @@
+"""Per-kernel shape/dtype sweeps vs the pure-jnp oracles (interpret mode)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import packing
+from repro.core.gate_ir import random_graph
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.kernels.logic_dsp import (logic_forward, logic_infer_bits,
+                                     pack_bits_jnp, unpack_bits_jnp)
+from repro.kernels.xnor_gemm import pack_pm1, xnor_gemm, xnor_gemm_ref
+
+
+# ---------------------------------------------------------------------------
+# packing
+# ---------------------------------------------------------------------------
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(1, 200), st.integers(1, 40), st.integers(0, 2 ** 31 - 1))
+def test_packing_roundtrip(batch, n, seed):
+    rng = np.random.default_rng(seed)
+    bits = rng.integers(0, 2, (batch, n)).astype(bool)
+    words = packing.pack_bits(bits)
+    assert words.shape == (n, -(-batch // 32))
+    assert (packing.unpack_bits(words, batch) == bits).all()
+    # jnp implementation bit-identical
+    jw = np.asarray(pack_bits_jnp(jnp.asarray(bits)))
+    assert (jw == words).all()
+    assert (np.asarray(unpack_bits_jnp(jnp.asarray(words), batch)) == bits
+            ).all()
+
+
+# ---------------------------------------------------------------------------
+# logic_dsp kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("ni,ng,no,n_unit,alloc,batch", [
+    (4, 10, 2, 8, "direct", 33),
+    (8, 200, 5, 16, "direct", 300),
+    (8, 200, 5, 16, "liveness", 300),
+    (32, 800, 24, 64, "liveness", 257),
+    (16, 500, 8, 3, "liveness", 64),
+    (6, 50, 6, 128, "direct", 1000),   # n_unit >> gates per level
+])
+def test_logic_kernel_vs_oracle(ni, ng, no, n_unit, alloc, batch, rng):
+    g = random_graph(rng, ni, ng, no)
+    prog = compile_graph(g, n_unit=n_unit, alloc=alloc)
+    X = rng.integers(0, 2, (batch, ni)).astype(bool)
+    ref = g.evaluate(X)
+    assert (execute_program_np(prog, X) == ref).all()
+    assert (logic_infer_bits(prog, X) == ref).all()                # pallas
+    assert (logic_infer_bits(prog, X, use_ref=True) == ref).all()  # jnp ref
+
+
+def test_logic_kernel_multiblock(rng):
+    """W > block_w exercises the grid (paper's multi-round batching)."""
+    g = random_graph(rng, 8, 100, 4)
+    prog = compile_graph(g, n_unit=16, alloc="liveness")
+    X = rng.integers(0, 2, (32 * 300, 8)).astype(bool)  # W = 300 words
+    assert (logic_infer_bits(prog, X, block_w=128) == g.evaluate(X)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_logic_kernel_property(seed):
+    rng = np.random.default_rng(seed)
+    ni = int(rng.integers(2, 10))
+    g = random_graph(rng, ni, int(rng.integers(5, 120)), 3)
+    prog = compile_graph(g, n_unit=int(rng.integers(1, 33)),
+                         alloc=rng.choice(["direct", "liveness"]))
+    X = rng.integers(0, 2, (int(rng.integers(1, 100)), ni)).astype(bool)
+    assert (logic_infer_bits(prog, X) == g.evaluate(X)).all()
+
+
+# ---------------------------------------------------------------------------
+# xnor_gemm kernel
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("m,n,k,bm,bn,bk", [
+    (64, 48, 100, 32, 32, 2),
+    (128, 128, 512, 128, 128, 16),
+    (17, 5, 33, 8, 8, 1),
+    (256, 64, 2304, 64, 64, 8),   # VGG16 conv fanin (paper §1)
+])
+def test_xnor_gemm_vs_oracle(m, n, k, bm, bn, bk, rng):
+    a = jnp.asarray(rng.integers(0, 2, (m, k)), jnp.uint8)
+    b = jnp.asarray(rng.integers(0, 2, (n, k)), jnp.uint8)
+    got = xnor_gemm(a, b, bm=bm, bn=bn, bk=bk)
+    assert (np.asarray(got) == np.asarray(xnor_gemm_ref(a, b))).all()
+
+
+def test_pack_pm1_shapes(rng):
+    bits = jnp.asarray(rng.integers(0, 2, (5, 70)), jnp.uint8)
+    packed = pack_pm1(bits)
+    assert packed.shape == (5, 3)

@@ -1,0 +1,73 @@
+"""FFCL partitioning: equivalence, budget, pipelining integration."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.cost_model import CostModel
+from repro.core.gate_ir import random_graph
+from repro.core.partition import (compile_partitions, duplication_factor,
+                                  execute_partitions, output_cones,
+                                  partition)
+from repro.core.scheduler import execute_program_np
+from repro.core.simulator import simulate_pipeline
+from repro.kernels.logic_dsp import logic_infer_bits
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 10 ** 6), st.sampled_from([40, 120, 10 ** 6]))
+def test_partition_equivalence(seed, max_gates):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 10, 250, 12, locality=64)
+    parts = partition(g, max_gates=max_gates)
+    # every output appears exactly once
+    idx = sorted(i for p in parts for i in p.output_indices)
+    assert idx == list(range(g.n_outputs))
+    X = rng.integers(0, 2, (80, 10)).astype(bool)
+    assert (execute_partitions(parts, X) == g.evaluate(X)).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10 ** 6))
+def test_partition_respects_budget(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 8, 300, 16, locality=32)
+    cones = output_cones(g)
+    biggest = max(len(c) for c in cones)
+    budget = max(biggest, 60)   # budget must admit the largest single cone
+    parts = partition(g, max_gates=budget)
+    for p in parts:
+        assert p.graph.n_gates <= budget
+
+
+def test_partition_through_kernel(rng):
+    """Partitioned execution through the Pallas fabric == monolithic."""
+    g = random_graph(rng, 12, 400, 20, locality=48)
+    parts = partition(g, max_gates=150)
+    assert len(parts) >= 2
+    progs = compile_partitions(parts, n_unit=16)
+
+    def kernel_exec(graph, x):
+        prog = progs[[p.graph is graph for p in parts].index(True)]
+        return logic_infer_bits(prog, x)
+
+    X = rng.integers(0, 2, (64, 12)).astype(bool)
+    got = execute_partitions(parts, X, executor=kernel_exec)
+    assert (got == g.evaluate(X)).all()
+    # buffer budget actually shrank vs the monolithic program
+    from repro.core.scheduler import compile_graph
+    mono = compile_graph(g, n_unit=16, alloc="liveness")
+    assert max(p.n_addr for p in progs) < mono.n_addr
+
+
+def test_duplication_vs_pipelining_tradeoff(rng):
+    """The split costs duplicated gates but the modules pipeline (paper
+    eq. 2); the simulator quantifies both sides."""
+    g = random_graph(rng, 16, 600, 24, locality=64)
+    parts = partition(g, max_gates=250)
+    dup = duplication_factor(g, parts)
+    # duplication bounded by the partition count (every part <= whole graph)
+    assert 1.0 <= dup <= len(parts)
+    progs = compile_partitions(parts, n_unit=32)
+    sim = simulate_pipeline(progs, n_input_vectors=4096)
+    assert sim.total_cycles > 0
+    assert len(sim.timeline) == 2 * len(progs)

@@ -1,0 +1,102 @@
+"""Sharding rules: divisibility degradation + spec shapes (1-device mesh
+suffices: rules are pure functions of mesh axis sizes)."""
+import jax
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models.transformer import param_shapes
+from repro.serve.engine import init_decode_cache
+from repro.train import sharding as shd
+
+
+class FakeMesh:
+    """Just axis names + sizes — what the rule functions consume."""
+
+    def __init__(self, shape: dict):
+        self._shape = dict(shape)
+
+    @property
+    def axis_names(self):
+        return tuple(self._shape)
+
+    @property
+    def shape(self):
+        return self._shape
+
+
+MESH = FakeMesh({"data": 16, "model": 16})
+MESH3 = FakeMesh({"pod": 2, "data": 16, "model": 16})
+
+
+def test_param_pspec_rank_matches():
+    for arch in ("qwen3-8b", "mixtral-8x7b", "mamba2-370m",
+                 "recurrentgemma-2b", "hubert-xlarge"):
+        cfg = get_config(arch)
+        shapes = param_shapes(cfg)
+        specs = shd.param_pspecs(cfg, MESH, shapes)
+        flat_s = jax.tree.leaves(shapes)
+        flat_p = jax.tree.leaves(specs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        assert len(flat_s) == len(flat_p)
+        for s, p in zip(flat_s, flat_p):
+            assert len(p) <= len(s.shape), (arch, s.shape, p)
+
+
+def test_indivisible_dims_degrade_to_replication():
+    cfg = get_config("qwen3-8b")
+    # vocab 151936 % 16 == 0 -> sharded; a fake mesh of 7 can't divide it
+    mesh7 = FakeMesh({"data": 7, "model": 7})
+    shapes = param_shapes(cfg)
+    spec = shd.param_pspecs(cfg, mesh7, shapes)["embed"]
+    assert spec == P(None, None)
+
+
+def test_moe_expert_specs():
+    cfg = get_config("mixtral-8x7b")
+    shapes = param_shapes(cfg)
+    specs = shd.param_pspecs(cfg, MESH, shapes)
+    # stacked (L, E, D, F): L/E replicated, D->data, F->model
+    assert specs["blocks"]["w_gate"] == P(None, None, "data", "model")
+    assert specs["blocks"]["w_down"] == P(None, None, "model", "data")
+
+
+def test_moment_specs_add_pod_axis():
+    cfg = get_config("grok-1-314b")
+    shapes = param_shapes(cfg)
+    m = shd.moment_pspecs(cfg, MESH3, shapes)
+    # stacked leading L=64 divisible by pod=2 -> ZeRO over pod
+    assert m["blocks"]["wq"][0] == "pod"
+    # without a pod axis, moments == params
+    m2 = shd.moment_pspecs(cfg, MESH, shapes)
+    p2 = shd.param_pspecs(cfg, MESH, shapes)
+    assert m2["blocks"]["wq"] == p2["blocks"]["wq"]
+
+
+def test_batch_pspec_divisibility():
+    assert shd.batch_pspec(MESH3, 256, 2) == P(("pod", "data"), None)
+    assert shd.batch_pspec(MESH3, 1, 2) == P(None, None)   # long_500k
+    assert shd.batch_pspec(MESH, 8, 1) == P(None)          # 8 % 16 != 0
+
+
+def test_cache_pspecs_seq_sharded_when_kv_small():
+    cfg = get_config("qwen3-8b")    # kv=8 < model=16
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, 128, 32768))
+    specs = shd.cache_pspecs(cfg, MESH, cache)
+    # (L, B, C, Hk, hd): C (seq) sharded over model, heads replicated
+    assert specs.kv_k == P(None, "data", "model", None, None)
+
+
+def test_cache_pspecs_head_sharded_when_divisible():
+    cfg = get_config("hubert-xlarge").with_(is_encoder=False)  # kv=16
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, 128, 1024))
+    specs = shd.cache_pspecs(cfg, MESH, cache)
+    assert specs.kv_k == P(None, "data", None, "model", None)
+
+
+def test_cache_pspecs_ssm():
+    cfg = get_config("mamba2-370m")
+    cache = jax.eval_shape(lambda: init_decode_cache(cfg, 128, 32768))
+    specs = shd.cache_pspecs(cfg, MESH, cache)
+    assert specs.ssm_state == P(None, "data", "model", None, None)

@@ -1,0 +1,112 @@
+"""Property-based tests of the FFCL compiler invariants (hypothesis)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.gate_ir import LogicGraph, OpCode, UNARY, random_graph
+from repro.core.levelize import levelize
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.synth import dead_gate_elim, optimize, rebalance
+
+
+@st.composite
+def graphs(draw):
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    n_inputs = draw(st.integers(1, 12))
+    n_gates = draw(st.integers(1, 150))
+    n_outputs = draw(st.integers(1, 8))
+    rng = np.random.default_rng(seed)
+    return random_graph(rng, n_inputs, n_gates, n_outputs,
+                        locality=draw(st.sampled_from([4, 32, 1000])))
+
+
+def _vectors(g, seed=0):
+    rng = np.random.default_rng(seed)
+    n = min(64, 2 ** g.n_inputs)
+    return rng.integers(0, 2, (n, g.n_inputs)).astype(bool)
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs())
+def test_optimize_preserves_semantics(g):
+    X = _vectors(g)
+    ref = g.evaluate(X)
+    go = optimize(g)
+    assert (go.evaluate(X) == ref).all()
+    # objectives never regress
+    assert go.n_gates <= g.n_gates
+    assert levelize(go).depth <= levelize(g).depth
+
+
+@settings(max_examples=40, deadline=None)
+@given(graphs(), st.sampled_from([1, 2, 7, 64]),
+       st.sampled_from(["direct", "liveness"]))
+def test_program_matches_direct_eval(g, n_unit, alloc):
+    X = _vectors(g)
+    prog = compile_graph(g, n_unit=n_unit, alloc=alloc)
+    assert (execute_program_np(prog, X) == g.evaluate(X)).all()
+
+
+@settings(max_examples=30, deadline=None)
+@given(graphs(), st.sampled_from([1, 3, 16]))
+def test_schedule_respects_dependencies(g, n_unit):
+    """Every operand of a step was produced at a strictly earlier step (or
+    is an input/const), and dst addresses within a step never collide."""
+    prog = compile_graph(g, n_unit=n_unit, alloc="liveness")
+    produced_at = {}
+    for a in [0, 1, *prog.input_addrs.tolist()]:
+        produced_at[a] = -1
+    for s in range(prog.n_steps):
+        live_dsts = []
+        for u in range(prog.n_unit):
+            op = prog.opcode[s, u]
+            if op == 0:      # NOP
+                continue
+            for src in (prog.src_a[s, u], prog.src_b[s, u]):
+                assert src in produced_at and produced_at[src] < s, \
+                    f"step {s} reads address {src} not yet produced"
+            live_dsts.append(prog.dst[s, u])
+        assert len(live_dsts) == len(set(live_dsts)), f"dst collision @ {s}"
+        for dcur in live_dsts:
+            produced_at[int(dcur)] = s
+
+
+@settings(max_examples=30, deadline=None)
+@given(graphs(), st.sampled_from([2, 8, 128]))
+def test_eq23_subkernel_count(g, n_unit):
+    """Paper eq. 23: n_subkernels = sum_l ceil(gates_l / n_unit)."""
+    lv = levelize(g)
+    prog = compile_graph(g, n_unit=n_unit)
+    expected = int(np.ceil(lv.histogram() / n_unit).sum())
+    assert prog.n_steps == expected
+
+
+@settings(max_examples=25, deadline=None)
+@given(graphs())
+def test_liveness_never_larger(g):
+    d = compile_graph(g, n_unit=8, alloc="direct")
+    l = compile_graph(g, n_unit=8, alloc="liveness")
+    assert l.n_addr <= d.n_addr
+
+
+def test_dead_gate_elim_removes_unreachable(rng):
+    g = LogicGraph(4)
+    live = g.add_gate(OpCode.AND, g.input_wire(0), g.input_wire(1))
+    for _ in range(20):   # dead chain
+        g.add_gate(OpCode.OR, g.input_wire(2), g.input_wire(3))
+    g.set_outputs([live])
+    ge = dead_gate_elim(g)
+    assert ge.n_gates == 1
+
+
+def test_rebalance_reduces_chain_depth():
+    g = LogicGraph(8)
+    w = g.input_wire(0)
+    for i in range(1, 8):
+        w = g.add_gate(OpCode.AND, w, g.input_wire(i))
+    g.set_outputs([w])
+    assert levelize(g).depth == 7
+    gb = rebalance(g)
+    assert levelize(gb).depth == 3      # ceil(log2(8))
+    X = np.random.default_rng(0).integers(0, 2, (64, 8)).astype(bool)
+    assert (gb.evaluate(X) == g.evaluate(X)).all()

@@ -1,0 +1,61 @@
+"""End-to-end behaviour tests for the paper's system."""
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+from repro.core.cost_model import CostModel, FfclStats
+from repro.core.nullanet import (BinaryMLPConfig, mlp_to_logic_network,
+                                 train_binary_mlp)
+from repro.core.optimizer import binary_search
+from repro.core.scheduler import compile_graph
+from repro.data import make_binary_classification
+from repro.kernels.logic_dsp import logic_infer_bits
+
+
+def test_paper_pipeline_micro():
+    """NN -> FFCL -> compile -> logic-fabric inference, the full §4-§7 flow."""
+    x, y = make_binary_classification(1200, 16, n_classes=3, noise=0.05,
+                                      seed=3)
+    xt, yt, xv, yv = x[:1000], y[:1000], x[1000:], y[1000:]
+    cfg = BinaryMLPConfig(n_features=16, hidden=(12,), n_classes=3)
+    params = train_binary_mlp(cfg, xt, yt, steps=150)
+    net = mlp_to_logic_network(params, cfg, xt, mode="isf")
+
+    progs = [compile_graph(g, n_unit=8, alloc="liveness")
+             for g in net.graphs]
+
+    def kernel_exec(graph, bits):
+        prog = progs[[g is graph for g in net.graphs].index(True)]
+        return logic_infer_bits(prog, bits)
+
+    pred_direct = net.predict(xv)
+    pred_kernel = net.predict(xv, executor=kernel_exec)
+    # the kernel path must agree with direct evaluation EXACTLY
+    assert (pred_direct == pred_kernel).all()
+    # and the whole pipeline must actually classify
+    assert (pred_kernel == yv).mean() > 0.8
+
+    # design-space optimization runs on the real graphs (paper §7.2)
+    model = CostModel()
+    layers = [(FfclStats.from_graph(g), 1, len(xv)) for g in net.graphs]
+    res = binary_search(model, layers, n_unit_max=2048)
+    assert 1 <= res.best_n_unit <= 2048
+
+
+@pytest.mark.slow
+def test_dryrun_entry_small_mesh():
+    """The dry-run entrypoint machinery works end-to-end (subprocess owns
+    its own device count; one cheap decode cell)."""
+    code = (
+        "import os;"
+        "os.environ['XLA_FLAGS']='--xla_force_host_platform_device_count=512';"
+        "from repro.launch.dryrun import run_cell;"
+        "r = run_cell('mamba2-370m', 'decode_32k', False, force=True);"
+        "assert r['ok'], r; print('dryrun-ok', r['roofline']['bound'])"
+    )
+    out = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                         text=True, timeout=420,
+                         env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"})
+    assert "dryrun-ok" in out.stdout, out.stderr[-2000:]
