@@ -1,11 +1,16 @@
 """Benchmark harness — one function per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows. Usage:
-  PYTHONPATH=src python -m benchmarks.run [--quick]
+  PYTHONPATH=src python -m benchmarks.run [--quick] [--json PATH]
+
+``--json`` additionally writes the rows as ``{name: {us, derived}}`` —
+the machine-readable perf trajectory (``BENCH_logic.json``) that future
+PRs diff against.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import time
 
 import numpy as np
@@ -44,7 +49,10 @@ def bench_cost_model_validation(quick: bool) -> None:
     for n_unit in (64, 256, 1024):
         prog = compile_graph(lw.graph, n_unit=n_unit)
         sim = simulate_pipeline([prog] * m, n_input_vectors=lw.n_patches)
-        mdl = model.total_cycles(lw.stats, n_unit, lw.n_patches, m_modules=m)
+        # stats from the compiled program: with step fusion enabled the
+        # model must charge the scheduled step count, not eq. 23's
+        mdl = model.total_cycles(FfclStats.from_program(prog), n_unit,
+                                 lw.n_patches, m_modules=m)
         err = (mdl - sim.total_cycles) / sim.total_cycles
         errs.append(abs(err))
         row(f"fig6.model_vs_sim.n{n_unit}", cycles_us(sim.total_cycles),
@@ -176,7 +184,8 @@ def bench_kernels(quick: bool) -> None:
     for _ in range(reps):
         logic_infer_bits(prog, X)
     row("kernel.logic_dsp.interp", (time.perf_counter() - t0) / reps * 1e6,
-        f"gates={prog.n_gates} steps={prog.n_steps} batch=4096")
+        f"gates={prog.n_gates} steps={prog.n_steps} batch=4096 "
+        f"homog={prog.homogeneous.mean():.0%}")
 
     a = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
     b = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
@@ -186,6 +195,36 @@ def bench_kernels(quick: bool) -> None:
         xnor_gemm(a, b).block_until_ready()
     row("kernel.xnor_gemm.interp", (time.perf_counter() - t0) / reps * 1e6,
         "m=n=256 k=2304")
+
+
+# ---------------------------------------------------------------------------
+# compiler wall-clock: vectorized stream emission (scheduler.compile_graph)
+# ---------------------------------------------------------------------------
+
+def bench_compile(quick: bool) -> None:
+    # default ISF density (400): the same conv7 FFCL the full nn_e2e
+    # benchmarks compile, a few hundred gates
+    wl = workloads.build_workload([workloads.VGG16_LAYERS[6]])
+    g = wl[0].graph
+    reps = 20 if quick else 50
+    for alloc in ("direct", "liveness"):
+        compile_graph(g, n_unit=256, alloc=alloc)          # warm caches
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            prog = compile_graph(g, n_unit=256, alloc=alloc)
+        row(f"compile.vgg16_conv7.{alloc}",
+            (time.perf_counter() - t0) / reps * 1e6,
+            f"gates={g.n_gates} steps={prog.n_steps}")
+    # VGG16-scale stress: tens of thousands of gates through the same path
+    rng = np.random.default_rng(7)
+    n_gates = 10_000 if quick else 30_000
+    big = random_graph(rng, 64, n_gates, 32, locality=256)
+    for alloc in ("direct", "liveness"):
+        t0 = time.perf_counter()
+        prog = compile_graph(big, n_unit=256, alloc=alloc)
+        row(f"compile.random{n_gates // 1000}k.{alloc}",
+            (time.perf_counter() - t0) * 1e6,
+            f"gates={big.n_gates} steps={prog.n_steps}")
 
 
 # ---------------------------------------------------------------------------
@@ -206,6 +245,8 @@ def bench_pipelining(quick: bool) -> None:
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="also write rows as JSON {name: {us, derived}}")
     args, _ = ap.parse_known_args()
     print("name,us_per_call,derived")
     t0 = time.time()
@@ -215,8 +256,16 @@ def main() -> None:
     bench_nn_e2e(args.quick)
     bench_resources(args.quick)
     bench_pipelining(args.quick)
+    bench_compile(args.quick)
     bench_kernels(args.quick)
     print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({name: {"us": round(us, 3), "derived": derived}
+                       for name, us, derived in ROWS}, f, indent=1,
+                      sort_keys=True)
+            f.write("\n")
+        print(f"# wrote {args.json}")
 
 
 if __name__ == "__main__":

@@ -98,22 +98,41 @@ class FpgaFabric(TpuFabric):
 @dataclass(frozen=True)
 class FfclStats:
     """Statistics of one compiled FFCL module the model needs (paper Table 1
-    plus eq. 23 inputs)."""
+    plus eq. 23 inputs).
+
+    ``n_steps_scheduled``/``step_occupancy`` are only present when the stats
+    come from a *compiled* program (:meth:`from_program`): with step fusion
+    the scheduler emits fewer steps than eq. 23 predicts, and the model must
+    charge the stream/loop terms for the steps that actually exist
+    (DESIGN.md §3). Both are specific to the ``n_unit`` the program was
+    compiled for — do not reuse such stats to probe other unit counts
+    (the optimizer sweeps use :meth:`from_graph` stats, which stay on the
+    closed-form eq. 23 path).
+    """
 
     n_gates: int
     depth: int
     n_fanin: int                  # primary inputs
     n_outputs: int
     level_histogram: np.ndarray   # gates per level, shape (depth,)
+    n_steps_scheduled: int | None = None   # actual (possibly fused) steps
+    step_occupancy: np.ndarray | None = None  # (n_steps,) non-NOP units
+    n_unit_scheduled: int | None = None    # the n_unit compiled for
 
     @staticmethod
     def from_program(prog) -> "FfclStats":
-        hist = np.bincount(prog.level_of_step - 1, minlength=prog.depth)
-        # level_of_step counts steps; recover gate histogram if available
+        occ = (prog.opcode != 0).sum(axis=1).astype(np.int64)
+        if prog.n_steps:
+            hist = np.bincount(prog.level_of_step - 1, weights=occ,
+                               minlength=prog.depth)
+        else:
+            hist = np.zeros(prog.depth)
         return FfclStats(
             n_gates=prog.n_gates, depth=prog.depth, n_fanin=prog.n_inputs,
             n_outputs=prog.n_outputs,
-            level_histogram=np.asarray(hist, dtype=np.int64))
+            level_histogram=hist.astype(np.int64),
+            n_steps_scheduled=prog.n_steps, step_occupancy=occ,
+            n_unit_scheduled=prog.n_unit)
 
     @staticmethod
     def from_graph(graph) -> "FfclStats":
@@ -124,7 +143,20 @@ class FfclStats:
 
 
 def n_subkernels(stats: FfclStats, n_unit: int) -> int:
-    """Eq. 23: sum over levels of ceil(gates_l / n_unit)."""
+    """Sub-kernel step count: the actual scheduled count when the stats come
+    from a compiled (possibly level-fused) program, else eq. 23's closed
+    form — sum over levels of ceil(gates_l / n_unit).
+
+    Program-derived stats are pinned to the unit count they were compiled
+    for; probing a different ``n_unit`` with them is an error (use
+    ``FfclStats.from_graph`` for design-space sweeps)."""
+    if stats.n_steps_scheduled is not None:
+        if stats.n_unit_scheduled is not None and \
+                n_unit != stats.n_unit_scheduled:
+            raise ValueError(
+                f"stats were compiled for n_unit={stats.n_unit_scheduled}; "
+                f"cannot probe n_unit={n_unit} with a scheduled step count")
+        return int(stats.n_steps_scheduled)
     return int(np.ceil(stats.level_histogram / n_unit).sum())
 
 
@@ -211,18 +243,21 @@ class CostModel:
 
         ``exact_occupancy=False`` reproduces the paper's worst-case
         assumption (every step uses all n_unit units) -- the stated source
-        of its <10% model error. ``True`` charges actual per-level occupancy
-        (what the simulator does).
+        of its <10% model error. ``True`` charges actual per-step occupancy:
+        the scheduled ``step_occupancy`` profile when the stats come from a
+        compiled program (what the simulator feeds in), else the per-level
+        ceil/remainder approximation of the eq. 23 layout.
         """
         w = self._w_words(n_input_vectors)
         f = self.fabric
 
-        def step_cost(units: float) -> float:
+        def step_cost(units):
             # eq. 16 analogue: 2 operand-row gathers (VMEM->VREG) per unit,
             # eq. 19: 1 result-row scatter (half the gather traffic); the
             # opcode op runs at the fabric's word throughput (one (8,128)
             # slab/cycle on the VPU; 1 cycle across all DSP48s); plus the
-            # fixed per-step overhead (see TpuFabric/FpgaFabric).
+            # fixed per-step overhead (see TpuFabric/FpgaFabric). Pure
+            # arithmetic, so it vectorizes over an occupancy array.
             gather = 2 * units * w * 4 / f.vmem_bytes_per_cycle
             execute = f.step_exe_cycles + units * w / f.vpu_word_ops_per_cycle
             scatter = units * w * 4 / f.vmem_bytes_per_cycle
@@ -230,14 +265,22 @@ class CostModel:
 
         if not exact_occupancy:
             nsk = n_subkernels(stats, n_unit)
-            return nsk * step_cost(n_unit)
-        total = 0.0
-        for gates_l in stats.level_histogram:
-            full, rem = divmod(int(gates_l), n_unit)
-            total += full * step_cost(n_unit)
-            if rem:
-                total += step_cost(rem)
-        return total
+            units = float(n_unit)
+            if stats.n_steps_scheduled is not None and nsk:
+                # fused-step extension: the scheduler packs steps densely,
+                # so the mean scheduled occupancy (cost is linear in units)
+                # replaces the paper's all-units worst case, which at low
+                # occupancy overshoots the simulator far past the paper's
+                # <10% bound. Closed form still — no occupancy profile.
+                units = min(units, stats.n_gates / nsk)
+            return nsk * step_cost(units)
+        if stats.step_occupancy is not None:
+            return float(np.sum(step_cost(
+                stats.step_occupancy.astype(np.float64))))
+        full = stats.level_histogram // n_unit
+        rem = stats.level_histogram % n_unit
+        return float((full * step_cost(n_unit)).sum()
+                     + step_cost(rem[rem > 0].astype(np.float64)).sum())
 
     def n_compute(self, stats: FfclStats, n_unit: int, n_input_vectors: int,
                   exact_occupancy: bool = False) -> float:

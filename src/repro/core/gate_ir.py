@@ -52,6 +52,9 @@ _OP_FNS = {
 COMMUTATIVE = {OpCode.AND, OpCode.OR, OpCode.XOR, OpCode.NAND, OpCode.NOR,
                OpCode.XNOR}
 UNARY = {OpCode.NOT, OpCode.COPY}
+# Dispatch-branch index of the generic (mixed-opcode) kernel path: branches
+# 0..8 are the specialized per-opcode slab ops, 9 the 8-way chained select.
+MIXED_DISPATCH = len(OpCode)
 # (op, a==b) -> result expressed as ('wire', operand) or ('const', 0/1) or None
 ASSOCIATIVE = {OpCode.AND, OpCode.OR, OpCode.XOR}
 

@@ -31,15 +31,23 @@ class Levelization:
 
 
 def levelize(graph: LogicGraph) -> Levelization:
-    """Single topological pass (graph.gates is already in topo order)."""
-    n = graph.n_wires
-    levels = np.zeros(n, dtype=np.int64)
+    """Single topological pass (graph.gates is already in topo order).
+
+    The level recurrence is inherently sequential, so it runs over plain
+    Python ints (no per-gate numpy scalar overhead); the per-level buckets
+    are then built with one vectorized sort.
+    """
     base = graph.first_gate_wire
+    lv: list[int] = [0] * graph.n_wires
     for i, (op, a, b) in enumerate(graph.gates):
-        levels[base + i] = 1 + max(levels[a], levels[b])
-    depth = int(levels.max()) if graph.n_gates else 0
-    buckets: list[list[int]] = [[] for _ in range(depth)]
-    for i in range(graph.n_gates):
-        buckets[levels[base + i] - 1].append(i)
-    level_gates = [np.asarray(b, dtype=np.int64) for b in buckets]
+        la, lb = lv[a], lv[b]
+        lv[base + i] = (la if la >= lb else lb) + 1
+    levels = np.asarray(lv, dtype=np.int64)
+    depth = int(levels[base:].max()) if graph.n_gates else 0
+    gate_levels = levels[base:]
+    by_level = np.argsort(gate_levels, kind="stable")
+    bounds = np.searchsorted(gate_levels[by_level],
+                             np.arange(1, depth + 2))
+    level_gates = [by_level[bounds[l]:bounds[l + 1]]
+                   for l in range(depth)]
     return Levelization(levels=levels, depth=depth, level_gates=level_gates)

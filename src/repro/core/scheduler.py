@@ -1,10 +1,26 @@
 """Sub-kernel decomposition + memory/opcode assignment (paper §6.1, eq. 23).
 
 Turns a levelized :class:`LogicGraph` into a :class:`LogicProgram` — the
-flat address/opcode streams that drive the time-shared compute units:
+flat address/opcode streams that drive the time-shared compute units.
+
+Scheduling pipeline (DESIGN.md §1): levelize -> opcode-sort -> fuse ->
+address-alloc -> emit:
 
   * each logic level with ``n_l`` gates on a fabric with ``n_unit`` units is
     split into ``ceil(n_l / n_unit)`` *sub-kernel steps* (eq. 23);
+  * **opcode sorting** (``opcode_sort=True``): gates inside a level are
+    stably sorted by opcode before slicing, so most steps are
+    *opcode-homogeneous* — every active unit runs the same bitwise op.
+    Homogeneous steps carry a per-step ``step_opcode`` scalar and dispatch
+    through one specialized slab op in the kernels instead of the 8-way
+    chained opcode select (DESIGN.md §1.2);
+  * **step fusion** (``fuse_levels=True``): capacity-constrained ASAP list
+    scheduling across levels — a gate may join any earlier,
+    partially-occupied step as long as every operand was produced at a
+    strictly earlier step. This merges (parts of) consecutive levels into
+    shared steps and shrinks ``n_steps`` — the ``fori_loop`` trip count and
+    the N_subkernel term of eq. 23 — below the eq. 23 value whenever level
+    sizes are ragged modulo ``n_unit`` (DESIGN.md §1.3);
   * every wire gets an address in the data buffer; per step, unit ``u`` reads
     ``buf[src_a[s,u]]`` and ``buf[src_b[s,u]]``, applies ``opcode[s,u]``, and
     writes ``buf[dst[s,u]]`` (paper Tables 2/3: Addr. Mem. Buf. holds
@@ -27,11 +43,13 @@ Address allocation strategies:
 """
 from __future__ import annotations
 
+import itertools
 from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, UNARY, apply_op
+from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, MIXED_DISPATCH,
+                                OpCode, apply_op)
 from repro.core.levelize import Levelization, levelize
 from repro.core import packing
 
@@ -45,6 +63,11 @@ class LogicProgram:
     src_b: np.ndarray
     dst: np.ndarray
     opcode: np.ndarray
+    # per-step dispatch metadata (opcode-homogeneous scheduling)
+    step_opcode: np.ndarray     # (n_steps,) int32; the shared opcode where
+                                # homogeneous, 0 for mixed steps
+    homogeneous: np.ndarray     # (n_steps,) bool; True iff all non-NOP units
+                                # in the step run the same opcode
     # buffer layout
     n_addr: int                 # data-buffer rows (incl. consts + trash)
     trash_addr: int
@@ -55,7 +78,7 @@ class LogicProgram:
     n_outputs: int
     n_gates: int
     depth: int
-    level_of_step: np.ndarray   # (n_steps,) which logic level each step serves
+    level_of_step: np.ndarray   # (n_steps,) highest logic level in each step
     n_unit: int
     name: str = "ffcl"
 
@@ -65,8 +88,17 @@ class LogicProgram:
 
     @property
     def n_subkernels(self) -> int:
-        """Paper eq. 23: sum over levels of ceil(gates_in_level / n_unit)."""
+        """Scheduled step count; == eq. 23 with ``fuse_levels=False``,
+        <= eq. 23 with fusion enabled."""
         return self.n_steps
+
+    @property
+    def step_branch(self) -> np.ndarray:
+        """(n_steps,) dispatch-branch index for the banked kernels:
+        the opcode itself for homogeneous steps, :data:`MIXED_DISPATCH`
+        (generic 8-way select) for mixed tail steps."""
+        return np.where(self.homogeneous, self.step_opcode,
+                        MIXED_DISPATCH).astype(np.int32)
 
     def stats(self) -> dict:
         occupancy = self.n_gates / max(1, self.n_steps * self.n_unit)
@@ -74,13 +106,124 @@ class LogicProgram:
             "name": self.name, "n_gates": self.n_gates, "depth": self.depth,
             "n_steps": self.n_steps, "n_unit": self.n_unit,
             "n_addr": self.n_addr, "occupancy": occupancy,
+            "homogeneous_frac": float(self.homogeneous.mean())
+            if self.n_steps else 1.0,
         }
+
+
+def _layout_steps_bulk(graph: LogicGraph, lv: Levelization, n_unit: int,
+                       ops_col: np.ndarray, opcode_sort: bool):
+    """Eq. 23 layout with zero per-level Python work: one global
+    (level, opcode) sort + histogram arithmetic. Used whenever fusion is
+    off or provably cannot fire (every level fits in one step)."""
+    base = graph.first_gate_wire
+    hist = lv.histogram()
+    steps_per_level = -(-hist // n_unit)
+    cum_steps = np.zeros(lv.depth + 1, dtype=np.int64)
+    np.cumsum(steps_per_level, out=cum_steps[1:])
+    glevels = lv.levels[base:]
+    if opcode_sort:
+        order = np.lexsort((ops_col, glevels))
+    else:
+        order = np.argsort(glevels, kind="stable")
+    n_steps = int(cum_steps[-1])
+    counts = np.full(n_steps, n_unit, dtype=np.int64)
+    if n_steps:
+        counts[cum_steps[1:] - 1] = hist - (steps_per_level - 1) * n_unit
+    level_tag = np.repeat(np.arange(1, lv.depth + 1, dtype=np.int64),
+                          steps_per_level)
+    return order, counts, level_tag
+
+
+def _layout_steps(graph: LogicGraph, lv: Levelization, n_unit: int,
+                  ops_col: np.ndarray, a_col: np.ndarray, b_col: np.ndarray,
+                  unary_mask: np.ndarray, opcode_sort: bool,
+                  fuse_levels: bool):
+    """Assign every gate to a (step, unit-slot).
+
+    Returns ``(order, counts, level_tag)`` where ``order`` is the gate
+    indices in execution order, ``counts[s]`` the number of gates in step
+    ``s`` and ``level_tag[s]`` the highest logic level placed in step ``s``.
+
+    Without fusion this is exactly the eq. 23 layout: each level is sliced
+    into ``ceil(n_l / n_unit)`` steps (opcode-sorted when requested). With
+    fusion, gates may additionally back-fill spare capacity of any earlier
+    step whose index is >= 1 + max(def_step of their operands) — safe
+    because within a step all reads precede all writes, and a gate is never
+    co-scheduled with a producer of one of its operands.
+    """
+    base = graph.first_gate_wire
+    def_step = np.full(graph.n_wires, -1, dtype=np.int64)
+    step_chunks: list[list[np.ndarray]] = []   # step -> gate-index arrays
+    occ: list[int] = []                        # step -> occupied unit slots
+    level_tag: list[int] = []
+
+    for level in range(1, lv.depth + 1):
+        gates = lv.gates_at(level)
+        ops_l = ops_col[gates]
+        placed = 0
+        if fuse_levels:
+            ma = def_step[a_col[gates]]
+            mb = np.where(unary_mask[gates], np.int64(-1),
+                          def_step[b_col[gates]])
+            min_step = np.maximum(ma, mb) + 1      # earliest legal step
+            keys = (ops_l, min_step) if opcode_sort else (min_step,)
+            order_l = np.lexsort(keys)
+            gs, ms = gates[order_l], min_step[order_l]
+            # back-fill spare capacity of existing steps, earliest first
+            s = int(ms[0]) if len(gs) else 0
+            while placed < len(gs) and s < len(step_chunks):
+                cap = n_unit - occ[s]
+                if cap > 0:
+                    eligible = int(np.searchsorted(ms, s, side="right"))
+                    k = min(cap, eligible - placed)
+                    if k > 0:
+                        take = gs[placed:placed + k]
+                        step_chunks[s].append(take)
+                        occ[s] += k
+                        def_step[base + take] = s
+                        level_tag[s] = level
+                        placed += k
+                s += 1
+            rem = gs[placed:]
+            if opcode_sort and len(rem):
+                rem = rem[np.argsort(ops_col[rem], kind="stable")]
+        elif opcode_sort:
+            rem = gates[np.argsort(ops_l, kind="stable")]
+        else:
+            rem = gates
+        # leftover gates open fresh steps at the end (all operands are in
+        # earlier steps by construction, so any packing is legal)
+        for off in range(0, len(rem), n_unit):
+            chunk = rem[off:off + n_unit]
+            def_step[base + chunk] = len(step_chunks)
+            step_chunks.append([chunk])
+            occ.append(len(chunk))
+            level_tag.append(level)
+
+    if step_chunks:
+        order = np.concatenate(
+            [c[0] if len(c) == 1 else np.concatenate(c)
+             for c in step_chunks])
+    else:
+        order = np.zeros(0, dtype=np.int64)
+    counts = np.asarray(occ, dtype=np.int64)
+    return order, counts, np.asarray(level_tag, dtype=np.int64)
 
 
 def compile_graph(graph: LogicGraph, n_unit: int,
                   alloc: str = "direct",
-                  lv: Levelization | None = None) -> LogicProgram:
-    """Schedule ``graph`` onto ``n_unit`` time-shared compute units."""
+                  lv: Levelization | None = None, *,
+                  opcode_sort: bool = True,
+                  fuse_levels: bool = True) -> LogicProgram:
+    """Schedule ``graph`` onto ``n_unit`` time-shared compute units.
+
+    ``opcode_sort`` groups each level's gates by opcode so steps are
+    opcode-homogeneous (one slab op in the kernels); ``fuse_levels`` lets
+    gates back-fill spare unit slots of earlier steps, shrinking
+    ``n_steps`` below the eq. 23 count (see DESIGN.md §1). Both default on;
+    disable ``fuse_levels`` to reproduce the paper-exact eq. 23 layout.
+    """
     if n_unit < 1:
         raise ValueError("n_unit must be >= 1")
     if alloc not in ("direct", "liveness"):
@@ -88,30 +231,44 @@ def compile_graph(graph: LogicGraph, n_unit: int,
     lv = lv or levelize(graph)
     base = graph.first_gate_wire
 
-    # --- step layout: level -> ceil(n_l/n_unit) steps (eq. 23) ---
-    steps: list[np.ndarray] = []          # gate indices per step
-    level_of_step: list[int] = []
-    for level in range(1, lv.depth + 1):
-        gates = lv.gates_at(level)
-        for s in range(0, len(gates), n_unit):
-            steps.append(gates[s:s + n_unit])
-            level_of_step.append(level)
-    n_steps = len(steps)
+    if graph.n_gates:
+        # ~5x faster than np.asarray on a large list of tuples
+        gates_arr = np.fromiter(
+            itertools.chain.from_iterable(graph.gates), dtype=np.int64,
+            count=3 * graph.n_gates).reshape(graph.n_gates, 3)
+    else:
+        gates_arr = np.zeros((0, 3), dtype=np.int64)
+    ops_col, a_col, b_col = gates_arr[:, 0], gates_arr[:, 1], gates_arr[:, 2]
+    unary_mask = (ops_col == int(OpCode.NOT)) | (ops_col == int(OpCode.COPY))
 
-    # --- step index at which each wire is defined / last read ---
-    def_step = np.full(graph.n_wires, -1, dtype=np.int64)   # -1: input/const
-    for si, gs in enumerate(steps):
-        for gi in gs:
-            def_step[base + gi] = si
+    # --- step layout (levelize -> opcode-sort -> fuse) ---
+    # Back-fill fusion can only fire when some level spans >= 2 steps (a
+    # single-step level pins every next-level gate's earliest step past
+    # it); otherwise the fully-bulk eq. 23 layout is equivalent and avoids
+    # the per-level scheduling loop entirely.
+    if not fuse_levels or not graph.n_gates or \
+            int(lv.histogram().max()) <= n_unit:
+        order, counts, level_tag = _layout_steps_bulk(
+            graph, lv, n_unit, ops_col, opcode_sort)
+    else:
+        order, counts, level_tag = _layout_steps(
+            graph, lv, n_unit, ops_col, a_col, b_col, unary_mask,
+            opcode_sort, fuse_levels)
+    n_steps = len(counts)
+    starts = np.zeros(n_steps + 1, dtype=np.int64)
+    np.cumsum(counts, out=starts[1:])
+    step_idx = np.repeat(np.arange(n_steps, dtype=np.int64), counts)
+    pos = np.arange(len(order), dtype=np.int64) - np.repeat(
+        starts[:-1], counts)
+
+    # --- step index at which each wire is last read (bulk, no gate loop) ---
     last_read = np.full(graph.n_wires, -1, dtype=np.int64)
-    for si, gs in enumerate(steps):
-        for gi in gs:
-            op, a, b = graph.gates[gi]
-            last_read[a] = max(last_read[a], si)
-            if OpCode(op) not in UNARY:
-                last_read[b] = max(last_read[b], si)
-    for o in graph.outputs:
-        last_read[o] = n_steps  # outputs live to the end
+    if len(order):
+        np.maximum.at(last_read, a_col[order], step_idx)
+        binary = ~unary_mask[order]
+        np.maximum.at(last_read, b_col[order][binary], step_idx[binary])
+    if graph.outputs:
+        last_read[np.asarray(graph.outputs, dtype=np.int64)] = n_steps
 
     # --- address allocation ---
     addr = np.full(graph.n_wires, -1, dtype=np.int64)
@@ -121,55 +278,73 @@ def compile_graph(graph: LogicGraph, n_unit: int,
         n_addr = graph.n_wires + 1
     else:
         addr[CONST0], addr[CONST1] = 0, 1
-        for i in range(graph.n_inputs):
-            addr[2 + i] = 2 + i
-        next_fresh = 2 + graph.n_inputs
+        addr[2:base] = np.arange(2, base)
+        next_fresh = base
         free: list[int] = []
         # release queue: step -> addresses that become free at that step
         release: list[list[int]] = [[] for _ in range(n_steps + 1)]
-        for w in range(graph.n_wires):
-            lr = last_read[w]
-            if lr >= 0 and lr < n_steps and addr[w] >= 0:
-                release[lr + 1].append(int(addr[w]))
-        for si, gs in enumerate(steps):
-            free.extend(release[si])
-            for gi in gs:
-                w = base + gi
+        pre_lr = last_read[:base]
+        for w in np.nonzero((pre_lr >= 0) & (pre_lr < n_steps))[0]:
+            release[pre_lr[w] + 1].append(int(addr[w]))
+        gate_lr = last_read[base + order].tolist()
+        starts_l, assigned = starts.tolist(), []
+        for si in range(n_steps):
+            if release[si]:
+                free.extend(release[si])
+            for j in range(starts_l[si], starts_l[si + 1]):
                 if free:
-                    addr[w] = free.pop()
+                    a = free.pop()
                 else:
-                    addr[w] = next_fresh
+                    a = next_fresh
                     next_fresh += 1
-                lr = last_read[w]
+                assigned.append(a)
+                lr = gate_lr[j]
                 if 0 <= lr < n_steps:
-                    release[lr + 1].append(int(addr[w]))
+                    release[lr + 1].append(a)
                 elif lr == -1:  # dead gate: reusable immediately next step
-                    release[si + 1].append(int(addr[w]))
+                    release[si + 1].append(a)
+        if len(order):
+            addr[base + order] = np.asarray(assigned, dtype=np.int64)
         trash = next_fresh
         n_addr = next_fresh + 1
 
-    # --- emit streams ---
+    # --- emit streams (bulk scatter, no per-gate/per-unit loop) ---
     src_a = np.zeros((n_steps, n_unit), dtype=np.int32)
     src_b = np.zeros((n_steps, n_unit), dtype=np.int32)
     dst = np.full((n_steps, n_unit), trash, dtype=np.int32)
     opcode = np.zeros((n_steps, n_unit), dtype=np.int32)  # NOP
-    for si, gs in enumerate(steps):
-        for u, gi in enumerate(gs):
-            op, a, b = graph.gates[gi]
-            src_a[si, u] = addr[a]
-            src_b[si, u] = addr[b] if OpCode(op) not in UNARY else addr[CONST0]
-            dst[si, u] = addr[base + gi]
-            opcode[si, u] = op
+    if len(order):
+        src_a[step_idx, pos] = addr[a_col[order]]
+        b_read = np.where(unary_mask[order], np.int64(CONST0), b_col[order])
+        src_b[step_idx, pos] = addr[b_read]
+        dst[step_idx, pos] = addr[base + order]
+        opcode[step_idx, pos] = ops_col[order]
+
+    # --- per-step homogeneity metadata ---
+    if n_steps:
+        mx = opcode.max(axis=1)
+        mn = np.where(opcode == 0, np.int32(127), opcode).min(axis=1)
+        # A step is homogeneous only if its opcode-0 lanes are pure padding
+        # (dst == trash): a *real* NOP gate must produce 0 on its wire, which
+        # the specialized non-NOP slab op would clobber. All-NOP steps are
+        # safe either way (the NOP branch writes the correct 0).
+        pad_only = ((opcode != 0) | (dst == trash)).all(axis=1)
+        homogeneous = (mx == 0) | ((mx == mn) & pad_only)
+        step_opcode = np.where(homogeneous, mx, 0).astype(np.int32)
+    else:
+        homogeneous = np.zeros(0, dtype=bool)
+        step_opcode = np.zeros(0, dtype=np.int32)
 
     return LogicProgram(
         src_a=src_a, src_b=src_b, dst=dst, opcode=opcode,
+        step_opcode=step_opcode, homogeneous=homogeneous,
         n_addr=int(n_addr), trash_addr=int(trash),
         input_addrs=addr[2:2 + graph.n_inputs].astype(np.int64),
         output_addrs=addr[np.asarray(graph.outputs, dtype=np.int64)].astype(
             np.int64) if graph.outputs else np.zeros(0, np.int64),
         n_inputs=graph.n_inputs, n_outputs=graph.n_outputs,
         n_gates=graph.n_gates, depth=lv.depth,
-        level_of_step=np.asarray(level_of_step, dtype=np.int64),
+        level_of_step=level_tag,
         n_unit=n_unit, name=graph.name,
     )
 
@@ -179,7 +354,9 @@ def execute_program_np(prog: LogicProgram, inputs: np.ndarray) -> np.ndarray:
 
     This is the semantic contract the Pallas kernel (kernels/logic_dsp) and
     the jnp reference (kernels/logic_dsp/ref.py) are tested against, and it
-    itself is tested against direct ``LogicGraph.evaluate``.
+    itself is tested against direct ``LogicGraph.evaluate``. Homogeneous
+    steps apply one bulk op to the whole (n_unit, W) slab; only mixed tail
+    steps fall back to per-opcode masking (never a per-unit Python loop).
     """
     inputs = np.asarray(inputs)
     batch = inputs.shape[0]
@@ -188,12 +365,19 @@ def execute_program_np(prog: LogicProgram, inputs: np.ndarray) -> np.ndarray:
     buf = np.zeros((prog.n_addr, w), dtype=np.int32)
     buf[1] = -1  # const-1 row = all ones
     buf[prog.input_addrs] = words
+    branch = prog.step_branch
     for s in range(prog.n_steps):
-        a = buf[prog.src_a[s]].astype(np.int64)
-        b = buf[prog.src_b[s]].astype(np.int64)
-        res = np.zeros_like(a)
-        for u in range(prog.n_unit):
-            res[u] = apply_op(int(prog.opcode[s, u]), a[u], b[u])
-        buf[prog.dst[s]] = res.astype(np.int32)
+        a = buf[prog.src_a[s]]
+        b = buf[prog.src_b[s]]
+        br = int(branch[s])
+        if br < MIXED_DISPATCH:                  # homogeneous: one slab op
+            res = apply_op(br, a, b)
+        else:                                    # mixed tail step
+            ops_row = prog.opcode[s]
+            res = np.zeros_like(a)
+            for oc in np.unique(ops_row):
+                lanes = ops_row == oc
+                res[lanes] = apply_op(int(oc), a[lanes], b[lanes])
+        buf[prog.dst[s]] = res
     out_words = buf[prog.output_addrs]
     return packing.unpack_bits(out_words, batch)

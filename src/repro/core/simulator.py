@@ -40,14 +40,13 @@ class SimResult:
 
 def _module_durations(model: CostModel, prog: LogicProgram,
                       n_input_vectors: int) -> tuple[float, float]:
-    """(data-movement cycles, compute cycles) for one module, exact occupancy."""
-    stats = FfclStats(
-        n_gates=prog.n_gates, depth=prog.depth, n_fanin=prog.n_inputs,
-        n_outputs=prog.n_outputs,
-        level_histogram=np.bincount(
-            np.repeat(prog.level_of_step,
-                      (prog.opcode != 0).sum(axis=1)) - 1,
-            minlength=prog.depth))
+    """(data-movement cycles, compute cycles) for one module, exact occupancy.
+
+    The stats come from the compiled program, so both the stream-movement
+    terms (which scale with the *scheduled*, possibly level-fused, step
+    count) and the compute loop (per-step non-NOP occupancy) are exact.
+    """
+    stats = FfclStats.from_program(prog)
     dm = model.n_data_moves(stats, prog.n_unit, n_input_vectors)
     comp = model.n_compute(stats, prog.n_unit, n_input_vectors,
                            exact_occupancy=True)

@@ -6,12 +6,19 @@ Maps the paper's hardware architecture (Fig. 3) onto a TPU core:
   Addr./Opcode buffers -> program streams (n_steps, n_unit), VMEM-resident
                           (replicated across grid steps via a 0-index map)
   DSP registers        -> VREG slabs: per step, gather 2x(n_unit, Wb) operand
-                          slabs, apply the opcode-selected bitwise op, scatter
+                          slabs, apply the step's bitwise op, scatter
                           (n_unit, Wb) results
   48-lane DSP SIMD     -> 32 samples/int32 x Wb lanes per row
   URAM double buffer   -> the Pallas grid pipeline: while block g computes,
                           Mosaic DMAs block g+1's input slab HBM->VMEM
                           (paper §5.2.2/§5.2.3 made structural)
+
+Opcode dispatch is *banked* (DESIGN.md §1.2): the scheduler emits a per-step
+branch index (``LogicProgram.step_branch``); homogeneous steps — the common
+case after opcode sorting — run ONE specialized bitwise slab op selected by
+``jax.lax.switch``, instead of the 8-way chained ``jnp.where`` select the
+mixed fallback branch pays. Step fusion further shrinks the ``fori_loop``
+trip count (DESIGN.md §1.3).
 
 Grid: one dimension over batch-word blocks (Wb = 128 lanes each). The whole
 program executes per block; blocks are independent (batch parallelism), so
@@ -31,14 +38,15 @@ import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
-from repro.kernels.logic_dsp.ref import apply_opcode_jnp
+from repro.kernels.logic_dsp.ref import apply_step_jnp
 
 LANE = 128      # lane tile (int32)
 SUBLANE = 8     # sublane tile
 
 
-def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref, inputs_ref,
-                  out_addrs_ref, out_ref, *, n_addr: int):
+def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref,
+                  step_branch_ref, inputs_ref, out_addrs_ref, out_ref,
+                  *, n_addr: int):
     """One grid step: run the full program over one batch-word block."""
     wb = inputs_ref.shape[1]
     n_steps = src_a_ref.shape[0]
@@ -52,22 +60,25 @@ def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref, inputs_ref,
         idx_b = src_b_ref[s]
         a = jnp.take(buf, idx_a, axis=0)                      # (n_unit, Wb)
         b = jnp.take(buf, idx_b, axis=0)
-        r = apply_opcode_jnp(opcode_ref[s][:, None], a, b)
+        r = apply_step_jnp(step_branch_ref[s], opcode_ref[s], a, b)
         return buf.at[dst_ref[s]].set(r)
 
-    buf = jax.lax.fori_loop(0, n_steps, step, buf)
+    if n_steps:  # static; a gateless program has (0, n_unit) streams whose
+        buf = jax.lax.fori_loop(0, n_steps, step, buf)  # body can't trace
     out_ref[...] = jnp.take(buf, out_addrs_ref[...], axis=0)
 
 
 @functools.partial(jax.jit, static_argnames=("n_addr", "block_w", "interpret"))
-def logic_pallas_call(src_a, src_b, dst, opcode, input_words, output_addrs,
-                      *, n_addr: int, block_w: int = LANE,
+def logic_pallas_call(src_a, src_b, dst, opcode, step_branch, input_words,
+                      output_addrs, *, n_addr: int, block_w: int = LANE,
                       interpret: bool = True):
     """Launch the kernel over ceil(W / block_w) batch-word blocks.
 
     Args:
       src_a/src_b/dst/opcode: (n_steps, n_unit) int32 (n_unit % 8 == 0
         recommended for sublane alignment; scheduler pads with NOPs).
+      step_branch: (n_steps,) int32 per-step dispatch branch
+        (opcode for homogeneous steps, MIXED_DISPATCH for mixed ones).
       input_words: (n_inputs, W) int32; W padded to block_w by the caller.
       output_addrs: (n_outputs,) int32.
     Returns:
@@ -79,17 +90,18 @@ def logic_pallas_call(src_a, src_b, dst, opcode, input_words, output_addrs,
         raise ValueError(f"W={w} must be a multiple of block_w={block_w}")
     grid = (w // block_w,)
 
-    prog_spec = lambda arr: pl.BlockSpec(arr.shape, lambda g: (0, 0))
+    prog_spec = lambda arr: pl.BlockSpec(arr.shape,
+                                         lambda g, nd=arr.ndim: (0,) * nd)
     return pl.pallas_call(
         functools.partial(_logic_kernel, n_addr=n_addr),
         grid=grid,
         in_specs=[
             prog_spec(src_a), prog_spec(src_b), prog_spec(dst),
-            prog_spec(opcode),
+            prog_spec(opcode), prog_spec(step_branch),
             pl.BlockSpec((n_inputs, block_w), lambda g: (0, g)),
             pl.BlockSpec((n_outputs,), lambda g: (0,)),
         ],
         out_specs=pl.BlockSpec((n_outputs, block_w), lambda g: (0, g)),
         out_shape=jax.ShapeDtypeStruct((n_outputs, w), jnp.int32),
         interpret=interpret,
-    )(src_a, src_b, dst, opcode, input_words, output_addrs)
+    )(src_a, src_b, dst, opcode, step_branch, input_words, output_addrs)

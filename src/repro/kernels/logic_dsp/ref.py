@@ -6,16 +6,24 @@ rows 2..2+n_inputs hold the packed primary inputs; per sub-kernel step,
 unit u computes ``opcode[s,u]`` over rows ``src_a[s,u]``/``src_b[s,u]`` and
 writes row ``dst[s,u]`` (NOPs write a trash row). Outputs are gathered from
 ``output_addrs`` at the end.
+
+Dispatch is *banked* (DESIGN.md §1.2): the scheduler sorts each level's
+gates by opcode, so nearly every step is opcode-homogeneous and executes
+one specialized slab op selected by ``jax.lax.switch`` on the per-step
+branch index; only mixed tail steps pay the generic 8-way chained select.
 """
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
 
+from repro.core.gate_ir import MIXED_DISPATCH
+
 
 def apply_opcode_jnp(op: jnp.ndarray, a: jnp.ndarray,
                      b: jnp.ndarray) -> jnp.ndarray:
-    """Vectorized opcode dispatch; ``op`` broadcasts against a/b (int32)."""
+    """Generic vectorized opcode dispatch; ``op`` broadcasts against a/b
+    (int32). Used for mixed-opcode steps only."""
     ones = jnp.int32(-1)
     r = jnp.zeros_like(a)                                   # NOP = 0
     r = jnp.where(op == 1, a & b, r)                        # AND
@@ -29,10 +37,36 @@ def apply_opcode_jnp(op: jnp.ndarray, a: jnp.ndarray,
     return r
 
 
+# Branch k (k < MIXED_DISPATCH) is the specialized slab op for opcode k —
+# applied to ALL unit rows of the step, including NOP-padding rows, whose
+# results land on the trash address and are never read. Branch
+# MIXED_DISPATCH is the generic fallback for ragged mixed-opcode steps.
+STEP_BRANCHES = (
+    lambda a, b, ops: jnp.zeros_like(a),                    # NOP
+    lambda a, b, ops: a & b,                                # AND
+    lambda a, b, ops: a | b,                                # OR
+    lambda a, b, ops: a ^ b,                                # XOR
+    lambda a, b, ops: (a & b) ^ jnp.int32(-1),              # NAND
+    lambda a, b, ops: (a | b) ^ jnp.int32(-1),              # NOR
+    lambda a, b, ops: (a ^ b) ^ jnp.int32(-1),              # XNOR
+    lambda a, b, ops: a ^ jnp.int32(-1),                    # NOT
+    lambda a, b, ops: a,                                    # COPY
+    lambda a, b, ops: apply_opcode_jnp(ops[:, None], a, b),  # mixed
+)
+
+
+def apply_step_jnp(branch: jnp.ndarray, opcodes: jnp.ndarray,
+                   a: jnp.ndarray, b: jnp.ndarray) -> jnp.ndarray:
+    """One sub-kernel step on (n_unit, W) operand slabs: a single bitwise
+    slab op for homogeneous steps, the chained select otherwise."""
+    return jax.lax.switch(branch, STEP_BRANCHES, a, b, opcodes)
+
+
 def logic_forward_ref(src_a: jnp.ndarray, src_b: jnp.ndarray,
                       dst: jnp.ndarray, opcode: jnp.ndarray,
                       input_words: jnp.ndarray, output_addrs: jnp.ndarray,
-                      n_addr: int) -> jnp.ndarray:
+                      n_addr: int,
+                      step_branch: jnp.ndarray | None = None) -> jnp.ndarray:
     """Execute the program on packed inputs.
 
     Args:
@@ -40,6 +74,9 @@ def logic_forward_ref(src_a: jnp.ndarray, src_b: jnp.ndarray,
       input_words: (n_inputs, W) int32 packed inputs (row i = input i).
       output_addrs: (n_outputs,) int32.
       n_addr: buffer rows (incl. consts + trash).
+      step_branch: (n_steps,) int32 per-step dispatch branch
+        (``LogicProgram.step_branch``); None forces the generic dispatch on
+        every step (legacy path, used as a baseline in benchmarks).
     Returns:
       (n_outputs, W) int32 packed outputs.
     """
@@ -52,8 +89,12 @@ def logic_forward_ref(src_a: jnp.ndarray, src_b: jnp.ndarray,
     def step(s, buf):
         a = jnp.take(buf, src_a[s], axis=0)       # (n_unit, W)
         b = jnp.take(buf, src_b[s], axis=0)
-        r = apply_opcode_jnp(opcode[s][:, None], a, b)
+        if step_branch is None:
+            r = apply_opcode_jnp(opcode[s][:, None], a, b)
+        else:
+            r = apply_step_jnp(step_branch[s], opcode[s], a, b)
         return buf.at[dst[s]].set(r)
 
-    buf = jax.lax.fori_loop(0, src_a.shape[0], step, buf)
+    if src_a.shape[0]:  # static guard: gateless programs have no steps
+        buf = jax.lax.fori_loop(0, src_a.shape[0], step, buf)
     return jnp.take(buf, output_addrs, axis=0)

@@ -67,7 +67,8 @@ def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray
     arrs = program_arrays(prog)
     out_words = logic_forward_ref(
         arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
-        words, arrs["output_addrs"], arrs["n_addr"])
+        words, arrs["output_addrs"], arrs["n_addr"],
+        step_branch=arrs["step_branch"])
     h = unpack_bits_jnp(out_words, xb.shape[0]).astype(jnp.float32)
     y = (2.0 * h - 1.0) @ p["w_out"].astype(jnp.float32)
     return y.reshape(*bsh, -1).astype(x.dtype)

@@ -173,7 +173,11 @@ def batch_pspec(mesh: Mesh, batch_size: int, ndim: int,
             if batch_size % total == 0 and total > best_total:
                 best, best_total = sub, total
     if best:
-        return P(best, *([None] * (ndim - 1)))
+        # unwrap singleton axis tuples: P('data') and P(('data',)) shard
+        # identically but compare unequal, and every consumer (and test)
+        # spells the scalar form
+        return P(best if len(best) > 1 else best[0],
+                 *([None] * (ndim - 1)))
     return P(*([None] * ndim))
 
 

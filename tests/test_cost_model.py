@@ -69,9 +69,15 @@ def test_model_error_shrinks_with_m(workload):
 
 
 def test_eq23(workload):
+    """Paper eq. 23 holds for the unfused layout; fusion only shrinks it,
+    and program-derived stats report the scheduled count."""
     g, stats = workload
     for u in (1, 7, 64, 4096):
-        assert n_subkernels(stats, u) == compile_graph(g, n_unit=u).n_steps
+        unfused = compile_graph(g, n_unit=u, fuse_levels=False)
+        assert n_subkernels(stats, u) == unfused.n_steps
+        fused = compile_graph(g, n_unit=u)
+        assert fused.n_steps <= unfused.n_steps
+        assert n_subkernels(FfclStats.from_program(fused), u) == fused.n_steps
 
 
 def test_breakdown_bound_shares(workload):

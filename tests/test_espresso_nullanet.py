@@ -1,6 +1,9 @@
 """Two-level minimization + NullaNet conversion (paper §7)."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import espresso

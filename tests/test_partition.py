@@ -1,6 +1,9 @@
 """FFCL partitioning: equivalence, budget, pipelining integration."""
 import numpy as np
 import pytest
+
+pytest.importorskip(
+    "hypothesis", reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.cost_model import CostModel
