@@ -1,9 +1,19 @@
 """Two-level logic minimization over incompletely specified functions.
 
-NullaNet (paper §7.1) forms each neuron's Boolean spec either by full input
-enumeration (small fanin) or as an ISF sampled from training data: an on-set,
-an off-set, and everything unobserved as don't-care. This module implements
-an espresso-style EXPAND / IRREDUNDANT loop over cube lists:
+Place in the synthesis flow: this is the *first* synthesis stage, where a
+neuron's truth-table semantics become Boolean structure. NullaNet (paper
+§7.1, core/nullanet.py) forms each neuron's spec either by full input
+enumeration (small fanin) or as an ISF sampled from training data: an
+on-set, an off-set, and everything unobserved as don't-care. ``minimize``
+compresses that spec into a small sum-of-products cover; ``sop_to_graph``
+factors the cover into the 2-input gate DAG that multi-level restructuring
+(core/synth.py), the scheduler (core/scheduler.py), and ultimately the
+serving engine consume. The ISF don't-care set is where the paper's
+accuracy/area trade lives — the fewer observed minterms, the more freedom
+EXPAND has.
+
+This module implements an espresso-style EXPAND / IRREDUNDANT loop over
+cube lists:
 
   cube = (mask, val): covers x  iff  all(x[mask] == val[mask]).
 
@@ -12,6 +22,20 @@ from the off-set (don't-cares absorb automatically: anything not in the
 off-set may be covered). IRREDUNDANT removes cubes whose on-set coverage is
 contained in the union of the others. The result is a minimal-ish SOP that
 ``sop_to_graph`` factors into a 2-input gate DAG for the FFCL compiler.
+
+>>> import numpy as np
+>>> X_on = np.array([[0, 0], [0, 1]], dtype=np.uint8)   # f = ~a (b free)
+>>> X_off = np.array([[1, 0], [1, 1]], dtype=np.uint8)
+>>> cubes = minimize(X_on, X_off)
+>>> len(cubes)                         # one cube: a == 0, b dropped
+1
+>>> int(cubes[0][0].sum())             # a single literal survives
+1
+>>> check_cover(cubes, X_on, X_off)
+True
+>>> g = sop_to_graph([cubes], n_inputs=2)
+>>> bool(g.evaluate(np.array([[0, 1]], dtype=bool))[0, 0])
+True
 """
 from __future__ import annotations
 

@@ -13,6 +13,7 @@ Wire numbering convention (matches the paper's Tables 2/3):
 from __future__ import annotations
 
 import enum
+import hashlib
 from dataclasses import dataclass, field
 from typing import Iterable, Sequence
 
@@ -117,6 +118,7 @@ class LogicGraph:
             raise ValueError(
                 f"gate operands ({a},{b}) must precede wire {wire}")
         self.gates.append((int(op), a, b))
+        self.__dict__.pop("_fingerprint_cache", None)
         return wire
 
     def set_outputs(self, outs: Iterable[int]) -> None:
@@ -125,6 +127,7 @@ class LogicGraph:
             if not 0 <= o < self.n_wires:
                 raise ValueError(f"output wire {o} does not exist")
         self.outputs = outs
+        self.__dict__.pop("_fingerprint_cache", None)
 
     # ---- evaluation (the pure-python/numpy oracle for everything above) ----
     def evaluate(self, inputs: np.ndarray) -> np.ndarray:
@@ -150,6 +153,39 @@ class LogicGraph:
         return vals[self.outputs].T.astype(bool)
 
     # ---- analysis ----
+    def fingerprint(self) -> str:
+        """Stable structural hash: two graphs with identical inputs, gate
+        lists, and output wires share a fingerprint regardless of ``name``.
+
+        This is the serving program-cache key (serve/logic_engine.py):
+        repeat traffic for a structurally identical FFCL — e.g. the same
+        NullaNet layer re-synthesized by another worker — reuses the
+        compiled :class:`~repro.core.scheduler.LogicProgram` and its device
+        arrays instead of recompiling.
+
+        Memoized against the construction API: ``add_gate`` and
+        ``set_outputs`` invalidate the cached digest, and a
+        ``(n_inputs, n_gates, outputs)`` guard backstops it, so
+        per-request hashing in the serving hot path is O(1) instead of
+        O(n_gates). Mutating ``gates`` entries in place (e.g.
+        ``g.gates[i] = ...``) bypasses both and would serve a stale
+        fingerprint — build graphs through ``add_gate``/``set_outputs``
+        only.
+        """
+        state = (self.n_inputs, self.n_gates, tuple(self.outputs))
+        cached = getattr(self, "_fingerprint_cache", None)
+        if cached is not None and cached[0] == state:
+            return cached[1]
+        h = hashlib.blake2b(digest_size=16)
+        h.update(np.int64(self.n_inputs).tobytes())
+        if self.gates:
+            h.update(np.asarray(self.gates, dtype=np.int64).tobytes())
+        h.update(b"|outputs|")
+        h.update(np.asarray(self.outputs, dtype=np.int64).tobytes())
+        fp = h.hexdigest()
+        self._fingerprint_cache = (state, fp)
+        return fp
+
     def fanout_counts(self) -> np.ndarray:
         fo = np.zeros(self.n_wires, dtype=np.int64)
         for op, a, b in self.gates:

@@ -5,7 +5,36 @@ natural word is int32 on the VPU, so we pack 32 *samples* per word and keep a
 word (lane) axis of width W = ceil(batch/32). A gate op on a (row, W) slab
 processes 32*W samples in one VPU op row.
 
-Layout: ``packed[w, j]`` bit ``k`` (LSB-first) = ``bits[j*32 + k, w]``.
+Layout (also DESIGN.md §5 — the serving slot table is sized to exactly the
+``32*W`` samples of one slab)::
+
+    bits (batch, n_wires) bool          packed (n_wires, W) int32
+                                        W = ceil(batch / 32)
+
+              sample axis ->                      word axis ->
+            s0 s1 ... s31 | s32 ... s63            w=0     w=1
+    wire 0 [ b  b  ...  b |  b  ...  b ]   wire 0 [0x….  0x…. ]
+    wire 1 [ b  b  ...  b |  b  ...  b ]   wire 1 [0x….  0x…. ]
+      ...                           pack->   ...
+    wire n [ b  b  ...  b |  b  ...  b ]   wire n [0x….  0x…. ]
+
+    packed[n, w] bit k (LSB-first) == bits[w*32 + k, n]
+
+A batch that is not a multiple of 32 pads its final word with zeros;
+``unpack_bits`` slices the padding back off.
+
+>>> import numpy as np
+>>> bits = np.zeros((33, 2), dtype=bool)   # 33 samples -> W = 2 words
+>>> bits[0, 0] = bits[32, 1] = True
+>>> packed_width(33)
+2
+>>> w = pack_bits(bits)
+>>> w.shape                                # (n_wires, W)
+(2, 2)
+>>> int(w[0, 0]), int(w[1, 1])   # samples 0/32 -> bit 0 of words 0/1
+(1, 1)
+>>> bool((unpack_bits(w, 33) == bits).all())
+True
 """
 from __future__ import annotations
 

@@ -16,7 +16,11 @@ makes). The resulting modules execute back-to-back on the same fabric with
 task pipelining (simulator.py), exactly like the paper's multi-FFCL flow.
 
 ``execute_partitions`` re-assembles the full output vector and is tested
-for exact equivalence against the unpartitioned graph.
+for exact equivalence against the unpartitioned graph. The serving engine
+(serve/logic_engine.py) does the same re-assembly at the packed-word level:
+``output_permutation`` maps the concatenation of per-partition output rows
+back to the original output order, so a partitioned graph is served as a
+pipelined sequence of programs over ONE packed input slab.
 """
 from __future__ import annotations
 
@@ -124,6 +128,27 @@ def compile_partitions(parts: list[Partition], n_unit: int,
                        alloc: str = "liveness") -> list[LogicProgram]:
     return [compile_graph(p.graph, n_unit=n_unit, alloc=alloc)
             for p in parts]
+
+
+def output_permutation(parts: list[Partition], n_outputs: int) -> np.ndarray:
+    """Permutation ``perm`` with ``concat(part outputs)[perm] == original``.
+
+    Row ``perm[oi]`` is the position of original output ``oi`` in the
+    concatenation of the partitions' output vectors (in partition order).
+    Every partition shares the full primary-input vector, so stacking the
+    per-program ``(n_out_p, W)`` output slabs and gathering with ``perm``
+    re-assembles the monolithic ``(n_outputs, W)`` result without
+    unpacking — the word-level analogue of :func:`execute_partitions`.
+    """
+    perm = np.full(n_outputs, -1, dtype=np.int64)
+    pos = 0
+    for p in parts:
+        for oi in p.output_indices:
+            perm[oi] = pos
+            pos += 1
+    if pos != n_outputs or (perm < 0).any():
+        raise ValueError("partitions do not cover every output exactly once")
+    return perm
 
 
 def execute_partitions(parts: list[Partition], inputs: np.ndarray,

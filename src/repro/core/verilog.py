@@ -1,8 +1,17 @@
 """Structural-Verilog front-end/back-end for FFCL modules (paper §4).
 
-The paper: "The input to the flow is a description of a FFCL module in
-Verilog format" (NullaNet emits Verilog; ABC/Yosys normalize it). We support
-the gate-level subset those tools emit:
+Place in the synthesis flow: this is the *interchange boundary* of the
+compiler. The paper's flow starts from "a description of a FFCL module in
+Verilog format" — NullaNet (core/nullanet.py) emits one netlist per neuron
+after two-level minimization (core/espresso.py) and multi-level
+restructuring (core/synth.py); ABC/Yosys-normalized third-party netlists
+enter the same way. ``parse_verilog`` turns that text into the
+:class:`~repro.core.gate_ir.LogicGraph` every downstream stage (levelize ->
+schedule -> kernel/serving) consumes, and ``emit_verilog`` closes the loop
+for hand-off back to HLS/FPGA tooling (round-trip tested in
+tests/test_gate_ir.py).
+
+We support the gate-level subset those tools emit:
 
   module m(a, b, y);
     input a, b;  output y;  wire w1;
@@ -11,7 +20,22 @@ the gate-level subset those tools emit:
   endmodule
 
 Continuous assigns are parsed with a tiny recursive-descent expression parser
-and decomposed into 2-input gates on the fly.
+and decomposed into 2-input gates on the fly; statements may appear in any
+order (netlists need not be topologically sorted).
+
+>>> import numpy as np
+>>> g = parse_verilog('''
+...   module m(a, b, y);
+...     input a, b;  output y;  wire w1;
+...     and g0 (w1, a, b);
+...     assign y = ~(w1 ^ b);
+...   endmodule''')
+>>> g.n_inputs, g.n_outputs, g.n_gates   # and, xor, not
+(2, 1, 3)
+>>> bool(g.evaluate(np.array([[1, 1]], dtype=bool))[0, 0])  # ~((a&b)^b) = 1
+True
+>>> parse_verilog(emit_verilog(g)).n_gates                  # round-trips
+3
 """
 from __future__ import annotations
 

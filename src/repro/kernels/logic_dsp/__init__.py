@@ -1,6 +1,8 @@
-from repro.kernels.logic_dsp.ops import (logic_forward, logic_infer_bits,
-                                         pack_bits_jnp, unpack_bits_jnp)
+from repro.kernels.logic_dsp.ops import (forward_words, logic_forward,
+                                         logic_infer_bits, pack_bits_jnp,
+                                         program_arrays, unpack_bits_jnp)
 from repro.kernels.logic_dsp.ref import logic_forward_ref
 
-__all__ = ["logic_forward", "logic_infer_bits", "logic_forward_ref",
-           "pack_bits_jnp", "unpack_bits_jnp"]
+__all__ = ["forward_words", "logic_forward", "logic_infer_bits",
+           "logic_forward_ref", "pack_bits_jnp", "program_arrays",
+           "unpack_bits_jnp"]

@@ -75,23 +75,39 @@ def program_arrays(prog: LogicProgram, pad_unit: int = 8) -> dict:
     return arrs
 
 
+def forward_words(src_a, src_b, dst, opcode, step_branch, output_addrs,
+                  words: jnp.ndarray, *, n_addr: int,
+                  block_w: int = _k.LANE, interpret: bool = True,
+                  use_ref: bool = False) -> jnp.ndarray:
+    """Word-level program execution: (n_inputs, W) -> (n_outputs, W) int32.
+
+    Jit-safe core shared by :func:`logic_forward`, the fused
+    :func:`logic_infer_bits` path, and the serving engine
+    (serve/logic_engine.py), which amortizes one call across all queued
+    samples of a batch slot table. Gateless programs (0 steps) fall back to
+    the jnp reference: pallas rejects the (0, n_unit) stream block shape.
+    """
+    if use_ref or src_a.shape[0] == 0:
+        return logic_forward_ref(src_a, src_b, dst, opcode, words,
+                                 output_addrs, n_addr,
+                                 step_branch=step_branch)
+    padded = _pad_words(words, block_w)
+    out = _k.logic_pallas_call(
+        src_a, src_b, dst, opcode, step_branch, padded, output_addrs,
+        n_addr=n_addr, block_w=block_w, interpret=interpret)
+    return out[:, :words.shape[1]]
+
+
 def logic_forward(prog: LogicProgram, input_words: jnp.ndarray,
                   block_w: int = _k.LANE, interpret: bool = True,
                   use_ref: bool = False) -> jnp.ndarray:
     """Packed-word forward: (n_inputs, W) int32 -> (n_outputs, W) int32."""
     arrs = program_arrays(prog)
-    w = input_words.shape[1]
-    if use_ref or prog.n_steps == 0:
-        return logic_forward_ref(
-            arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
-            input_words, arrs["output_addrs"], arrs["n_addr"],
-            step_branch=arrs["step_branch"])
-    padded = _pad_words(input_words, block_w)
-    out = _k.logic_pallas_call(
+    return forward_words(
         arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
-        arrs["step_branch"], padded, arrs["output_addrs"],
-        n_addr=arrs["n_addr"], block_w=block_w, interpret=interpret)
-    return out[:, :w]
+        arrs["step_branch"], arrs["output_addrs"], input_words,
+        n_addr=arrs["n_addr"], block_w=block_w, interpret=interpret,
+        use_ref=use_ref)
 
 
 @functools.partial(jax.jit, static_argnames=("n_addr", "block_w",
@@ -106,18 +122,9 @@ def _infer_bits_packed(src_a, src_b, dst, opcode, step_branch, output_addrs,
     program execution used to dominate end-to-end latency by >10x.
     """
     words = pack_bits_jnp(bits)
-    # gateless programs (0 steps) fall back to the jnp reference: pallas
-    # rejects the (0, n_unit) stream block shape outright
-    if use_ref or src_a.shape[0] == 0:
-        out = logic_forward_ref(src_a, src_b, dst, opcode, words,
-                                output_addrs, n_addr,
-                                step_branch=step_branch)
-    else:
-        padded = _pad_words(words, block_w)
-        out = _k.logic_pallas_call(
-            src_a, src_b, dst, opcode, step_branch, padded, output_addrs,
-            n_addr=n_addr, block_w=block_w, interpret=interpret)
-        out = out[:, :words.shape[1]]
+    out = forward_words(src_a, src_b, dst, opcode, step_branch, output_addrs,
+                        words, n_addr=n_addr, block_w=block_w,
+                        interpret=interpret, use_ref=use_ref)
     return unpack_bits_jnp(out, bits.shape[0])
 
 

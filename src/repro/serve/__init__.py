@@ -1,6 +1,9 @@
 from repro.serve.engine import (DecodeCache, init_decode_cache, prefill,
                                 decode_step)
-from repro.serve.batcher import RequestBatcher, Request
+from repro.serve.batcher import Request, RequestBatcher, SlotTable
+from repro.serve.logic_engine import (CompiledEntry, LogicEngine,
+                                      LogicRequest, ProgramCache)
 
 __all__ = ["DecodeCache", "init_decode_cache", "prefill", "decode_step",
-           "RequestBatcher", "Request"]
+           "RequestBatcher", "Request", "SlotTable",
+           "LogicEngine", "LogicRequest", "ProgramCache", "CompiledEntry"]

@@ -4,6 +4,14 @@ The paper enqueues multiple OpenCL kernels out-of-order to keep the fabric
 busy; here a ``RequestBatcher`` packs incoming prompts into fixed-shape
 decode batches (continuous batching, slot-based): finished slots are
 recycled without recompiling, because the decode step is shape-stable.
+
+``SlotTable`` generalizes the same slot discipline beyond token decode: it
+allocates *sample rows* of a fixed-capacity batch (for the logic engine,
+``32 * W`` rows — the sample capacity of a packed ``(n_wires, W)`` word
+slab, see core/packing.py). A bit-vector request occupies ``len(samples)``
+rows for one fabric invocation and the rows are recycled for the next
+admission wave, so ragged request sizes (not multiples of 32) share words
+with their neighbours instead of padding to private word boundaries.
 """
 from __future__ import annotations
 
@@ -64,3 +72,50 @@ class RequestBatcher:
     @property
     def idle(self) -> bool:
         return not self.queue and all(s is None for s in self.slots)
+
+
+class SlotTable:
+    """Row-granular slot allocator over a fixed sample capacity.
+
+    ``acquire(n)`` hands out ``n`` free row indices (lowest-first, so the
+    active region stays dense and word-aligned requests pack adjacently);
+    ``release(rows)`` recycles them. The high-water mark records the densest
+    simultaneous occupancy ever reached — the serving analogue of decode
+    batch utilization.
+    """
+
+    def __init__(self, capacity: int):
+        if capacity < 1:
+            raise ValueError("capacity must be >= 1")
+        self.capacity = capacity
+        self._free: list[int] = list(range(capacity - 1, -1, -1))  # stack
+        self._allocated: set[int] = set()
+        self.high_water = 0
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_active(self) -> int:
+        return self.capacity - len(self._free)
+
+    def acquire(self, n: int) -> np.ndarray | None:
+        """Reserve ``n`` rows; None when fewer than ``n`` are free."""
+        if n < 0:
+            raise ValueError("n must be >= 0")
+        if n > len(self._free):
+            return None
+        rows = np.array([self._free.pop() for _ in range(n)], dtype=np.int64)
+        self._allocated.update(rows.tolist())
+        self.high_water = max(self.high_water, self.n_active)
+        return rows
+
+    def release(self, rows: np.ndarray) -> None:
+        for r in reversed(np.asarray(rows, dtype=np.int64).tolist()):
+            if not 0 <= r < self.capacity:
+                raise ValueError(f"row {r} out of range")
+            if r not in self._allocated:
+                raise RuntimeError(f"row {r} released without being held")
+            self._allocated.discard(r)
+            self._free.append(int(r))

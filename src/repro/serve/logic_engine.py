@@ -1,0 +1,472 @@
+"""Batched serving engine for compiled logic programs (``LogicEngine``).
+
+PR 1 made compile and single-shot execution fast; this module makes
+compiled :class:`~repro.core.scheduler.LogicProgram` objects a *served*
+artifact (ROADMAP north star; paper §5.2.4 host-side queueing and the §2
+"inference engine for ANY network" claim). Three layers:
+
+1. **Program registry** (:class:`ProgramCache`) — compiled programs plus
+   their device arrays, keyed by ``(graph fingerprint, n_unit, alloc,
+   max_gates)``. Repeat traffic for a structurally identical FFCL never
+   recompiles and never re-uploads streams; LRU-evicted entries drop their
+   jit runners with them.
+
+2. **Slot/word batching** (:class:`LogicEngine` + ``batcher.SlotTable``) —
+   incoming bit-vector requests are packed into the sample rows of one
+   fixed-capacity ``(capacity, n_inputs)`` batch, i.e. the ``32 * W``
+   samples of the packed ``(n_wires, W)`` word layout (core/packing.py).
+   One fabric invocation amortizes pack -> program(s) -> unpack across
+   every queued request, and the fixed capacity keeps the fused jit
+   shape-stable (one trace per program). Ragged request sizes share words;
+   freed rows are recycled between invocation waves.
+
+3. **Execution** — partitioned graphs (core/partition.py) run as a
+   *pipelined sequence* of sub-programs over one shared packed input slab
+   (the simulator's multi-FFCL task-pipelining model), re-assembled at the
+   word level via ``output_permutation``. With a multi-device mesh the
+   whole fused function runs under ``shard_map``: the batch axis — and
+   with it the packed word axis, ``W / n_devices`` words per shard — is
+   data-parallel across devices (specs built with train/sharding.py
+   helpers).
+
+Requests are one-shot (combinational logic has no decode loop): a request
+completes in the first invocation wave it is admitted to, so continuous
+batching here means draining an arbitrarily deep queue through a
+fixed-shape invocation at maximum word occupancy.
+"""
+from __future__ import annotations
+
+import time
+from collections import OrderedDict, deque
+from dataclasses import dataclass, field
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh
+
+from repro.core.gate_ir import LogicGraph
+from repro.core.packing import WORD_BITS
+from repro.core.partition import (compile_partitions, output_permutation,
+                                  partition)
+from repro.core.scheduler import LogicProgram, compile_graph
+from repro.kernels.logic_dsp import kernel as _k
+from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
+                                         program_arrays, unpack_bits_jnp)
+from repro.serve.batcher import SlotTable
+from repro.train.sharding import batch_pspec
+
+
+# ---------------------------------------------------------------------------
+# program registry
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CompiledEntry:
+    """One registry entry: the compiled program pipeline for a graph."""
+
+    key: tuple
+    programs: tuple[LogicProgram, ...]
+    output_perm: np.ndarray        # concat(part outputs)[perm] == original
+    n_inputs: int
+    n_outputs: int
+    # fused jit runners, attached lazily, keyed by engine execution config
+    # (mesh/shard/backend/capacity) so engines sharing a cache never run
+    # another engine's trace; evicted with the entry.
+    runners: dict = field(default_factory=dict)
+    compile_s: float = 0.0
+
+    @property
+    def partitioned(self) -> bool:
+        return len(self.programs) > 1
+
+
+class ProgramCache:
+    """LRU registry of compiled logic programs.
+
+    Keying contract (documented in DESIGN.md §5): the key is
+    ``(LogicGraph.fingerprint(), n_unit, alloc, max_gates)`` —
+
+      * ``fingerprint()`` hashes inputs/gates/outputs but NOT the name, so
+        structurally identical graphs from different producers share one
+        compiled program;
+      * ``n_unit``/``alloc`` change the emitted streams and the buffer
+        layout, so each fabric configuration caches separately;
+      * ``max_gates`` (the partition budget, None = monolithic) changes the
+        program *pipeline*, so partitioned and monolithic compilations of
+        the same graph coexist.
+
+    Device arrays ride along for free: ``program_arrays`` memoizes on the
+    (immutable) program object, and each engine attaches its fused jit
+    runner to the entry keyed by its execution config (mesh, shard,
+    backend, capacity — engines sharing a cache never run another
+    engine's trace), so eviction releases program, arrays, and traces
+    together.
+    """
+
+    def __init__(self, max_entries: int | None = None):
+        self.max_entries = max_entries
+        self._entries: OrderedDict[tuple, CompiledEntry] = OrderedDict()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __contains__(self, key: tuple) -> bool:
+        return key in self._entries
+
+    @staticmethod
+    def key_of(graph: LogicGraph, n_unit: int, alloc: str,
+               max_gates: int | None) -> tuple:
+        # a budget the graph fits under compiles the identical monolithic
+        # program as no budget at all — normalize so engines with different
+        # (unbinding) budgets share one entry instead of duplicating it
+        if max_gates is not None and graph.n_gates <= max_gates:
+            max_gates = None
+        return (graph.fingerprint(), n_unit, alloc, max_gates)
+
+    def peek(self, key: tuple) -> CompiledEntry | None:
+        """Entry for ``key`` without compiling, counting, or LRU-touching."""
+        return self._entries.get(key)
+
+    def get(self, graph: LogicGraph, n_unit: int, alloc: str = "liveness",
+            max_gates: int | None = None) -> CompiledEntry:
+        """Return (compiling on miss) the program pipeline for ``graph``."""
+        key = self.key_of(graph, n_unit, alloc, max_gates)
+        entry = self._entries.get(key)
+        if entry is not None:
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.misses += 1
+        t0 = time.perf_counter()
+        if max_gates is not None and graph.n_gates > max_gates:
+            parts = partition(graph, max_gates=max_gates)
+            programs = tuple(compile_partitions(parts, n_unit, alloc=alloc))
+            perm = output_permutation(parts, graph.n_outputs)
+        else:
+            programs = (compile_graph(graph, n_unit=n_unit, alloc=alloc),)
+            perm = np.arange(graph.n_outputs, dtype=np.int64)
+        entry = CompiledEntry(
+            key=key, programs=programs, output_perm=perm,
+            n_inputs=graph.n_inputs, n_outputs=graph.n_outputs,
+            compile_s=time.perf_counter() - t0)
+        self._entries[key] = entry
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return entry
+
+    def stats(self) -> dict:
+        return {"entries": len(self._entries), "hits": self.hits,
+                "misses": self.misses,
+                "programs": sum(len(e.programs)
+                                for e in self._entries.values())}
+
+
+# ---------------------------------------------------------------------------
+# requests
+# ---------------------------------------------------------------------------
+
+@dataclass
+class LogicRequest:
+    """One bit-vector inference request against a served graph."""
+
+    uid: int
+    key: tuple                     # program-cache key it is bound to
+    graph: LogicGraph              # retained so eviction can recompile
+    inputs: np.ndarray             # (n_samples, n_inputs) bool
+    result: np.ndarray             # (n_samples, n_outputs) bool, filled in
+    pending_chunks: int = 0
+    done: bool = False
+
+    @property
+    def n_samples(self) -> int:
+        return int(self.inputs.shape[0])
+
+
+@dataclass
+class _Chunk:
+    """A capacity-bounded slice [lo, hi) of a request's samples."""
+
+    req: LogicRequest
+    lo: int
+    hi: int
+
+    @property
+    def n(self) -> int:
+        return self.hi - self.lo
+
+
+# ---------------------------------------------------------------------------
+# the engine
+# ---------------------------------------------------------------------------
+
+class LogicEngine:
+    """Continuous-batching inference engine over compiled logic programs.
+
+    Args:
+      n_unit: compute units the programs are compiled for.
+      alloc: address allocation strategy (see core/scheduler.py).
+      capacity: samples per fabric invocation; rounded up to a multiple of
+        ``32 * n_devices`` so every device shard packs whole words. Default
+        ``32 * words_per_device * n_devices``.
+      words_per_device: sizes the default capacity (W words per device).
+      max_gates: partition budget — graphs above it are split by
+        output-cone clustering and served as a pipelined program sequence.
+      mesh: optional 1-axis ``jax.sharding.Mesh`` for data-parallel
+        serving; default builds one over all local devices when there is
+        more than one (or when ``shard=True``).
+      shard: force (True) / forbid (False) the shard_map path; default
+        ``None`` = auto (shard iff the mesh spans > 1 device).
+      cache: optionally share a :class:`ProgramCache` across engines.
+        Mutually exclusive with ``max_programs`` — bound a shared cache
+        at its own construction.
+      max_programs: LRU bound on the engine-owned program cache
+        (compiled programs + device arrays + jit traces per entry).
+      max_retained: bound on *completed* requests kept for
+        :meth:`result` pickup; beyond it the oldest unclaimed results are
+        dropped (FIFO). ``None`` (default) retains until claimed — set a
+        bound for fire-and-forget traffic so unclaimed results cannot
+        grow without limit.
+      use_ref / interpret / block_w: forwarded to the kernel layer.
+    """
+
+    def __init__(self, n_unit: int = 64, alloc: str = "liveness",
+                 capacity: int | None = None, words_per_device: int = 4,
+                 max_gates: int | None = None, mesh: Mesh | None = None,
+                 shard: bool | None = None, cache: ProgramCache | None = None,
+                 max_programs: int | None = None,
+                 max_retained: int | None = None, use_ref: bool = False,
+                 interpret: bool = True, block_w: int = _k.LANE):
+        self.n_unit = n_unit
+        self.alloc = alloc
+        self.max_gates = max_gates
+        self.use_ref = use_ref
+        self.interpret = interpret
+        self.block_w = block_w
+        if cache is not None and max_programs is not None:
+            raise ValueError(
+                "max_programs bounds the engine-owned cache; bound a shared "
+                "ProgramCache at its own construction instead")
+        self.cache = cache if cache is not None else ProgramCache(max_programs)
+
+        if mesh is None and (shard or (shard is None and
+                                       len(jax.devices()) > 1)):
+            mesh = Mesh(np.asarray(jax.devices()), ("data",))
+        self.mesh = mesh
+        n_dev = int(np.prod(list(mesh.shape.values()))) if mesh else 1
+        quantum = WORD_BITS * n_dev
+        if capacity is None:
+            capacity = WORD_BITS * words_per_device * n_dev
+        self.capacity = -(-capacity // quantum) * quantum
+        # auto (None) shards only when the mesh actually spans devices; an
+        # explicit shard=True forces the shard_map path even on one device
+        # (exercised by tests without multi-device hosts).
+        self.shard = bool(mesh is not None and
+                          (shard is True or (shard is None and n_dev > 1)))
+
+        self.slots = SlotTable(self.capacity)
+        self.max_retained = max_retained
+        self._queues: OrderedDict[tuple, deque[_Chunk]] = OrderedDict()
+        self._requests: dict[int, LogicRequest] = {}
+        self._finished_order: deque[int] = deque()
+        self._next_uid = 0
+        # execution-config key for per-engine runners on shared cache
+        # entries: two engines only share a trace when every knob that
+        # shapes it matches (devices included — a mesh is its device ids).
+        mesh_key = (None if self.mesh is None else
+                    (tuple(self.mesh.shape.items()),
+                     tuple(d.id for d in self.mesh.devices.flat)))
+        self._exec_key = (self.capacity, self.shard, mesh_key, self.use_ref,
+                          self.interpret, self.block_w)
+        # telemetry
+        self.invocations = 0
+        self.samples_served = 0
+        self._occupancy_sum = 0.0
+
+    # -- program / runner plumbing ------------------------------------------
+
+    def _entry(self, graph: LogicGraph) -> CompiledEntry:
+        entry = self.cache.get(graph, self.n_unit, self.alloc, self.max_gates)
+        if self._exec_key not in entry.runners:
+            entry.runners[self._exec_key] = self._build_runner(entry)
+        return entry
+
+    def _build_runner(self, entry: CompiledEntry) -> Callable:
+        """Fused jit: pack -> program pipeline -> permute -> unpack.
+
+        The program streams are closed over as device arrays (already
+        memoized by ``program_arrays``), so the only runtime operand is the
+        fixed-shape ``(capacity, n_inputs)`` bool batch — one trace per
+        registry entry. Partition sub-programs execute back-to-back on the
+        same packed slab; XLA overlaps their independent gather/scatter
+        chains, the in-graph analogue of the simulator's task pipelining.
+        """
+        arrs = [program_arrays(p) for p in entry.programs]
+        perm = jnp.asarray(entry.output_perm, jnp.int32)
+        kw = dict(block_w=self.block_w, interpret=self.interpret,
+                  use_ref=self.use_ref)
+
+        def run(bits: jnp.ndarray) -> jnp.ndarray:
+            words = pack_bits_jnp(bits)
+            outs = [forward_words(a["src_a"], a["src_b"], a["dst"],
+                                  a["opcode"], a["step_branch"],
+                                  a["output_addrs"], words,
+                                  n_addr=a["n_addr"], **kw) for a in arrs]
+            ow = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
+            ow = jnp.take(ow, perm, axis=0)
+            return unpack_bits_jnp(ow, bits.shape[0])
+
+        if self.shard:
+            # batch rows -> devices; each shard packs/serves its own
+            # capacity/n_dev samples = W/n_dev words of the word axis.
+            spec = batch_pspec(self.mesh, self.capacity, 2)
+            run = shard_map(run, mesh=self.mesh, in_specs=(spec,),
+                            out_specs=spec, check_rep=False)
+        return jax.jit(run)
+
+    # -- request lifecycle ---------------------------------------------------
+
+    def submit(self, graph: LogicGraph, bits: np.ndarray) -> int:
+        """Queue a request; returns its uid (serve with :meth:`step`)."""
+        bits = np.asarray(bits, dtype=bool)
+        if bits.ndim != 2 or bits.shape[1] != graph.n_inputs:
+            raise ValueError(
+                f"inputs must be (n, {graph.n_inputs}), got {bits.shape}")
+        entry = self._entry(graph)
+        uid = self._next_uid
+        self._next_uid += 1
+        req = LogicRequest(
+            uid=uid, key=entry.key, graph=graph, inputs=bits,
+            result=np.zeros((bits.shape[0], entry.n_outputs), dtype=bool))
+        self._requests[uid] = req
+        queue = self._queues.setdefault(entry.key, deque())
+        # oversized requests split into capacity-bounded chunks; each chunk
+        # is admitted independently so no request can wedge the queue.
+        for lo in range(0, max(req.n_samples, 1), self.capacity):
+            hi = min(lo + self.capacity, req.n_samples)
+            if hi > lo:
+                queue.append(_Chunk(req, lo, hi))
+                req.pending_chunks += 1
+        if req.pending_chunks == 0:      # empty request: trivially done
+            req.done = True
+            self._retire(uid)
+        return uid
+
+    def _retire(self, uid: int) -> None:
+        """Track a completed request; drop the oldest unclaimed results
+        beyond ``max_retained`` (already-claimed uids fall through)."""
+        self._finished_order.append(uid)
+        if self.max_retained is None:
+            return
+        while len(self._finished_order) > self.max_retained:
+            old = self._finished_order.popleft()
+            self._requests.pop(old, None)
+
+    def step(self) -> list[int]:
+        """One invocation wave: admit, execute, scatter back, recycle.
+
+        Serves the longest-waiting non-empty program queue (FIFO across
+        keys), admitting chunks into slot rows until the table is full,
+        then runs ONE fused fabric invocation for all of them. Returns the
+        uids completed this wave.
+        """
+        key = next((k for k, q in self._queues.items() if q), None)
+        if key is None:
+            return []
+        queue = self._queues[key]
+        entry = self.cache.peek(key)
+        if entry is None:
+            # LRU-evicted with requests still queued (max_programs below the
+            # concurrent working set): recompile from the retained graph —
+            # the request must not wedge the queue.
+            entry = self._entry(queue[0].req.graph)
+        elif self._exec_key not in entry.runners:
+            entry.runners[self._exec_key] = self._build_runner(entry)
+        admitted: list[tuple[_Chunk, np.ndarray]] = []
+        while queue:
+            rows = self.slots.acquire(queue[0].n)
+            if rows is None:
+                break
+            admitted.append((queue.popleft(), rows))
+        if not admitted:
+            return []
+
+        bits = np.zeros((self.capacity, entry.n_inputs), dtype=bool)
+        for chunk, rows in admitted:
+            bits[rows] = chunk.req.inputs[chunk.lo:chunk.hi]
+        out = np.asarray(entry.runners[self._exec_key](jnp.asarray(bits)))
+
+        finished: list[int] = []
+        n_active = sum(c.n for c, _ in admitted)
+        for chunk, rows in admitted:
+            chunk.req.result[chunk.lo:chunk.hi] = out[rows]
+            chunk.req.pending_chunks -= 1
+            self.slots.release(rows)
+            if chunk.req.pending_chunks == 0:
+                chunk.req.done = True
+                finished.append(chunk.req.uid)
+                self._retire(chunk.req.uid)
+        self.invocations += 1
+        self.samples_served += n_active
+        self._occupancy_sum += n_active / self.capacity
+        if not queue:
+            del self._queues[key]
+        return finished
+
+    @property
+    def idle(self) -> bool:
+        return not any(self._queues.values())
+
+    def result(self, uid: int, *, pop: bool = True) -> np.ndarray:
+        """Completed request's (n_samples, n_outputs) bool outputs."""
+        req = self._requests.get(uid)
+        if req is None:
+            raise KeyError(f"request {uid} unknown: never submitted, "
+                           "already claimed, or dropped by max_retained")
+        if not req.done:
+            raise RuntimeError(f"request {uid} still in flight")
+        if pop:
+            del self._requests[uid]
+            try:        # claimed results leave the retention window, so
+                self._finished_order.remove(uid)   # max_retained counts
+            except ValueError:                     # only UNCLAIMED ones
+                pass
+        return req.result
+
+    def drain(self) -> None:
+        """Run invocation waves until every queued request completes."""
+        while not self.idle:
+            self.step()
+
+    def serve(self, graph: LogicGraph, bits: np.ndarray) -> np.ndarray:
+        """Synchronous convenience: submit + drain + result."""
+        uid = self.submit(graph, bits)
+        self.drain()
+        return self.result(uid)
+
+    def reset_telemetry(self) -> None:
+        """Zero the invocation/occupancy counters (e.g. after warmup), so
+        steady-state measurements aren't polluted by warmup waves. Program
+        cache counters and slot high-water are left untouched."""
+        self.invocations = 0
+        self.samples_served = 0
+        self._occupancy_sum = 0.0
+
+    def stats(self) -> dict:
+        inv = max(1, self.invocations)
+        return {
+            "capacity": self.capacity,
+            "n_devices": (int(np.prod(list(self.mesh.shape.values())))
+                          if self.mesh else 1),
+            "sharded": self.shard,
+            "invocations": self.invocations,
+            "samples_served": self.samples_served,
+            "mean_occupancy": self._occupancy_sum / inv,
+            "slot_high_water": self.slots.high_water,
+            **{f"cache_{k}": v for k, v in self.cache.stats().items()},
+        }

@@ -1,0 +1,53 @@
+"""Markdown link checker (stdlib-only, used by the CI docs job).
+
+    python tools/check_markdown_links.py README.md DESIGN.md ...
+
+Validates that every relative link/image target in the given markdown
+files exists on disk (anchors and external http(s)/mailto links are
+skipped). Also validates that back-tick-free inline references of the form
+`[text](path)` inside tables resolve. Exits non-zero listing every broken
+link.
+"""
+from __future__ import annotations
+
+import re
+import sys
+from pathlib import Path
+
+_LINK = re.compile(r"!?\[[^\]]*\]\(([^)\s]+)(?:\s+\"[^\"]*\")?\)")
+_CODE_FENCE = re.compile(r"```.*?```", flags=re.S)
+
+
+def broken_links(md_path: Path) -> list[str]:
+    text = _CODE_FENCE.sub("", md_path.read_text(encoding="utf-8"))
+    bad = []
+    for target in _LINK.findall(text):
+        if target.startswith(("http://", "https://", "mailto:", "#")):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md_path.parent / rel).exists():
+            bad.append(f"{md_path}: broken link -> {target}")
+    return bad
+
+
+def main(argv: list[str]) -> int:
+    if not argv:
+        print("usage: check_markdown_links.py FILE.md [FILE.md ...]")
+        return 2
+    failures: list[str] = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            failures.append(f"{name}: file not found")
+            continue
+        failures.extend(broken_links(p))
+    for f in failures:
+        print(f, file=sys.stderr)
+    print(f"checked {len(argv)} files, {len(failures)} broken links")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))
