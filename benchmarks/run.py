@@ -282,6 +282,47 @@ def bench_serve_logic(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# end-to-end NullaNet classifier flow (flow/): train -> FFCL -> serve -> acc
+# ---------------------------------------------------------------------------
+
+def bench_flow_e2e(quick: bool) -> None:
+    from repro.flow import FlowConfig, input_bits, run_flow
+    from repro.serve import LogicEngine
+
+    cfg = FlowConfig(n_features=10 if quick else 12,
+                     hidden=(8, 6) if quick else (10, 8),
+                     n_classes=4, n_samples=1200 if quick else 4000,
+                     train_steps=120 if quick else 300, n_unit=32)
+    report, clf = run_flow(cfg)
+    row("flow.e2e.convert", report.convert_s * 1e6,
+        f"layers={len(report.layers)} gates={report.n_gates} "
+        f"steps={report.n_steps}")
+    row("flow.e2e.parity", 0.0,
+        f"parity={'EXACT' if report.parity else 'approx'} "
+        f"bit_identical={report.bit_identical} "
+        f"logic_acc={report.logic_acc['pallas']:.4f} "
+        f"binarized_acc={report.binarized_acc:.4f} "
+        f"float_acc={report.float_acc:.4f}")
+    row("flow.e2e.sim_cycles", cycles_us(report.sim_cycles),
+        f"bound={report.sim_bound} n_vectors={report.n_val}")
+
+    # warm per-backend inference wall-clock over the same val set the
+    # reported accuracies used
+    _, _, xv, _ = cfg.load_data()
+    bits = input_bits(xv)
+    engine = LogicEngine(n_unit=cfg.n_unit, alloc=cfg.alloc, capacity=256)
+    reps = 3 if quick else 5
+    for backend in ("reference", "pallas", "engine"):
+        clf.hidden_bits(bits, backend=backend, engine=engine)   # warm
+        t0 = time.perf_counter()
+        for _ in range(reps):
+            clf.hidden_bits(bits, backend=backend, engine=engine)
+        dt = (time.perf_counter() - t0) / reps
+        row(f"flow.e2e.{backend}", dt * 1e6,
+            f"samples_per_s={len(bits) / dt:.0f} batch={len(bits)}")
+
+
+# ---------------------------------------------------------------------------
 # compiler wall-clock: vectorized stream emission (scheduler.compile_graph)
 # ---------------------------------------------------------------------------
 
@@ -343,6 +384,7 @@ def main() -> None:
     bench_compile(args.quick)
     bench_kernels(args.quick)
     bench_serve_logic(args.quick)
+    bench_flow_e2e(args.quick)
     print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
     if args.json:
         with open(args.json, "w") as f:

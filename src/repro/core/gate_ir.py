@@ -212,6 +212,43 @@ class LogicGraph:
                           list(self.outputs), self.name)
 
 
+def compose_graphs(graphs: Sequence["LogicGraph"],
+                   name: str = "stacked") -> LogicGraph:
+    """Feed graph k's outputs into graph k+1's primary inputs.
+
+    The stages of a multi-layer NullaNet classifier (flow/) are per-layer
+    :class:`LogicGraph` objects whose interface widths chain
+    (``graphs[k].n_outputs == graphs[k+1].n_inputs``). Composing them
+    yields ONE combinational graph computing the whole hidden stack —
+    the artifact the serving engine executes so layer boundaries never
+    leave the packed-word domain (and so the partitioner can split the
+    stack by output cones rather than by layer).
+
+    Stage k+1's input wire i is rewired to whatever wire produces stage
+    k's output i — a constant, a primary input, or a gate — so degenerate
+    stages (constant or pass-through outputs) compose exactly.
+    """
+    graphs = list(graphs)
+    if not graphs:
+        raise ValueError("compose_graphs needs at least one graph")
+    out = LogicGraph(graphs[0].n_inputs, name=name)
+    feed = [out.input_wire(i) for i in range(graphs[0].n_inputs)]
+    for k, g in enumerate(graphs):
+        if g.n_inputs != len(feed):
+            raise ValueError(
+                f"stage {k} expects {g.n_inputs} inputs, previous stage "
+                f"produces {len(feed)}")
+        repl = np.zeros(g.n_wires, dtype=np.int64)
+        repl[CONST0], repl[CONST1] = CONST0, CONST1
+        repl[2:g.first_gate_wire] = feed
+        base = g.first_gate_wire
+        for i, (op, a, b) in enumerate(g.gates):
+            repl[base + i] = out.add_gate(op, int(repl[a]), int(repl[b]))
+        feed = [int(repl[o]) for o in g.outputs]
+    out.set_outputs(feed)
+    return out
+
+
 # ---------------------------------------------------------------------------
 # Random graph generator (tests / benchmarks): well-formed DAGs with
 # controllable size/shape, mirroring NullaNet-style FFCL statistics.

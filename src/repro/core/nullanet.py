@@ -56,15 +56,28 @@ def init_binary_mlp(cfg: BinaryMLPConfig) -> dict:
 
 
 def binary_mlp_forward(params: dict, x01: jnp.ndarray, n_layers: int,
-                       return_activations: bool = False):
-    """x01: {0,1} features. Hidden activations binarized; last layer linear."""
+                       return_activations: bool = False,
+                       activation: str = "sign"):
+    """x01: {0,1} features. Hidden activations binarized; last layer linear.
+
+    ``activation='relu'`` swaps the binarized hidden activations for ReLU
+    (full-precision) — the float upper-bound baseline of the end-to-end
+    accuracy-parity study (flow/report.py); it is never FFCL-convertible.
+    """
+    if activation not in ("sign", "relu"):
+        raise ValueError(f"unknown activation {activation!r}; "
+                         "use 'sign' or 'relu'")
     acts = [x01]
     h = 2.0 * x01.astype(jnp.float32) - 1.0   # +-1 encoding into the matmul
     for i in range(n_layers - 1):
         y = h @ params[f"w{i}"] + params[f"b{i}"]
-        a01 = _ste_sign01(y)
-        acts.append(a01)
-        h = 2.0 * a01 - 1.0
+        if activation == "relu":
+            acts.append(jax.nn.relu(y))
+            h = acts[-1]
+        else:
+            a01 = _ste_sign01(y)
+            acts.append(a01)
+            h = 2.0 * a01 - 1.0
     logits = h @ params[f"w{n_layers - 1}"] + params[f"b{n_layers - 1}"]
     if return_activations:
         return logits, acts
@@ -73,7 +86,7 @@ def binary_mlp_forward(params: dict, x01: jnp.ndarray, n_layers: int,
 
 def train_binary_mlp(cfg: BinaryMLPConfig, x: np.ndarray, y: np.ndarray,
                      steps: int = 300, batch: int = 256, lr: float = 2e-3,
-                     log_every: int = 0) -> dict:
+                     log_every: int = 0, activation: str = "sign") -> dict:
     n_layers = len(cfg.hidden) + 1
     params = init_binary_mlp(cfg)
     state = adamw_init(params)
@@ -81,7 +94,7 @@ def train_binary_mlp(cfg: BinaryMLPConfig, x: np.ndarray, y: np.ndarray,
     y = jnp.asarray(y, jnp.int32)
 
     def loss_fn(p, xb, yb):
-        logits = binary_mlp_forward(p, xb, n_layers)
+        logits = binary_mlp_forward(p, xb, n_layers, activation=activation)
         logp = jax.nn.log_softmax(logits)
         return -jnp.mean(jnp.take_along_axis(logp, yb[:, None], axis=1))
 
@@ -101,9 +114,10 @@ def train_binary_mlp(cfg: BinaryMLPConfig, x: np.ndarray, y: np.ndarray,
 
 
 def mlp_accuracy(params: dict, cfg: BinaryMLPConfig, x: np.ndarray,
-                 y: np.ndarray) -> float:
+                 y: np.ndarray, activation: str = "sign") -> float:
     n_layers = len(cfg.hidden) + 1
-    logits = binary_mlp_forward(params, jnp.asarray(x, jnp.float32), n_layers)
+    logits = binary_mlp_forward(params, jnp.asarray(x, jnp.float32), n_layers,
+                                activation=activation)
     return float(jnp.mean(jnp.argmax(logits, -1) == jnp.asarray(y)))
 
 
@@ -184,18 +198,23 @@ class LogicNetwork:
 
 def mlp_to_logic_network(params: dict, cfg: BinaryMLPConfig, x: np.ndarray,
                          mode: str = "auto") -> LogicNetwork:
-    """Full NullaNet conversion of the hidden stack of a trained MLP."""
+    """Full NullaNet conversion of the hidden stack of a trained MLP.
+
+    Thin wrapper over the flow conversion path (flow/convert.py, the
+    single conversion code path): calibration activations come from the
+    float64 hard forward — not the STE float32 training forward — so the
+    ISF care-sets sample exactly the Boolean function the logic must
+    reproduce (DESIGN.md §6.2). Graph-only (callers schedule at their own
+    ``n_unit``); the flow's :class:`LogicClassifier` is the compiled form.
+    """
+    from repro.flow.classifier import hard_forward, input_bits  # no cycle
+    from repro.flow.convert import layer_graph
     n_layers = len(cfg.hidden) + 1
-    _, acts = binary_mlp_forward(
-        params, jnp.asarray(x, jnp.float32), n_layers,
-        return_activations=True)
-    acts = [np.asarray(a).astype(np.uint8) for a in acts]
-    graphs = []
-    for i in range(n_layers - 1):
-        W = np.asarray(params[f"w{i}"])
-        b = np.asarray(params[f"b{i}"])
-        graphs.append(layer_to_graph(acts[i], W, b, mode=mode,
-                                     name=f"layer{i}"))
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    acts, _ = hard_forward(params_np, input_bits(x), n_layers)
+    graphs = [layer_graph(params_np[f"w{i}"], params_np[f"b{i}"], acts[i],
+                          mode=mode, name=f"layer{i}")
+              for i in range(n_layers - 1)]
     return LogicNetwork(graphs=graphs,
-                        w_out=np.asarray(params[f"w{n_layers - 1}"]),
-                        b_out=np.asarray(params[f"b{n_layers - 1}"]))
+                        w_out=params_np[f"w{n_layers - 1}"],
+                        b_out=params_np[f"b{n_layers - 1}"])

@@ -192,10 +192,18 @@ _OP_NAMES = {int(v): k for k, v in _PRIMS.items()}
 
 
 def emit_verilog(graph: LogicGraph) -> str:
-    """Emit the graph back as gate-level Verilog (round-trip tested)."""
+    """Emit the graph back as gate-level Verilog (round-trip tested).
+
+    Graph names are free-form (partitioning emits ``<name>.part``, flows
+    emit ``hidden-stack``); they are sanitized into legal Verilog
+    identifiers here.
+    """
+    name = re.sub(r"[^A-Za-z0-9_$]", "_", graph.name) or "ffcl"
+    if not re.match(r"[A-Za-z_]", name):
+        name = f"m_{name}"
     ins = [f"i{k}" for k in range(graph.n_inputs)]
     outs = [f"o{k}" for k in range(graph.n_outputs)]
-    lines = [f"module {graph.name}({', '.join(ins + outs)});"]
+    lines = [f"module {name}({', '.join(ins + outs)});"]
     if ins:
         lines.append(f"  input {', '.join(ins)};")
     if outs:
@@ -209,7 +217,12 @@ def emit_verilog(graph: LogicGraph) -> str:
     base = graph.first_gate_wire
     for j, (op, a, b) in enumerate(graph.gates):
         names[base + j] = gate_wires[j]
-        prim = _OP_NAMES[int(op)] if int(op) in _OP_NAMES else None
+        if OpCode(op) == OpCode.NOP:
+            # NOP gates produce constant 0 on their wire (gate_ir semantics);
+            # structural Verilog has no nop primitive, so emit the constant.
+            lines.append(f"  buf g{j} ({gate_wires[j]}, 1'b0);")
+            continue
+        prim = _OP_NAMES[int(op)]
         if OpCode(op) in (OpCode.NOT, OpCode.COPY):
             lines.append(f"  {prim} g{j} ({gate_wires[j]}, {names[a]});")
         else:

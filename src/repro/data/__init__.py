@@ -1,4 +1,5 @@
 from repro.data.synthetic import (make_binary_classification, TokenPipeline,
-                                  synthetic_tokens)
+                                  synthetic_tokens, train_val_split)
 
-__all__ = ["make_binary_classification", "TokenPipeline", "synthetic_tokens"]
+__all__ = ["make_binary_classification", "TokenPipeline", "synthetic_tokens",
+           "train_val_split"]

@@ -30,6 +30,19 @@ def make_binary_classification(n_samples: int, n_features: int,
     return x.astype(np.uint8), y.astype(np.int64)
 
 
+def train_val_split(x: np.ndarray, y: np.ndarray, val_frac: float = 0.25,
+                    seed: int = 0
+                    ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """Deterministic shuffled split -> (x_train, y_train, x_val, y_val)."""
+    if not 0.0 < val_frac < 1.0:
+        raise ValueError(f"val_frac must be in (0, 1), got {val_frac}")
+    n = len(x)
+    perm = np.random.default_rng(seed).permutation(n)
+    n_val = max(1, int(round(n * val_frac)))
+    tr, va = perm[:-n_val], perm[-n_val:]
+    return x[tr], y[tr], x[va], y[va]
+
+
 @dataclass(frozen=True)
 class TokenPipeline:
     """Stateless-seekable synthetic token stream.

@@ -1,0 +1,203 @@
+"""Multi-layer NullaNet classifier over chained compiled logic programs.
+
+The paper's actual workload (§7-§8): a whole NN inferred through
+fixed-function combinational logic. :class:`LogicClassifier` holds one
+:class:`~repro.flow.convert.CompiledLayer` per hidden layer plus the
+full-precision output head, and executes the hidden stack through three
+interchangeable paths that must agree bit-for-bit:
+
+  * ``reference`` — the jnp program oracle (kernels/logic_dsp/ref.py);
+  * ``pallas``    — the Pallas fabric kernel (interpret mode on CPU);
+  * ``engine``    — batched :class:`~repro.serve.LogicEngine` serving of
+    the *composed* hidden-stack graph (``gate_ir.compose_graphs``), so a
+    partition budget splits the stack by output cones and serves it as a
+    pipelined multi-program sequence (core/partition.py).
+
+**Packed-word handoff contract** (tested in tests/test_flow.py): for the
+reference/pallas paths the input batch is bit-packed ONCE into the
+``(n_bits, W)`` word layout (core/packing.py); each layer's packed output
+slab is fed directly as the next layer's packed input slab — row i of
+layer k's output words IS row i of layer k+1's input words, with no
+unpack/repack round-trip between layers. This works because every program
+loads its inputs at contiguous buffer rows 2..2+n_inputs and the layer
+widths chain (``layers[k].n_outputs == layers[k+1].n_inputs``). Samples
+that don't fill the last 32-bit word enter as zero padding; inverting
+gates and the constant-1 row flip those lanes, so inter-layer padding
+bits are garbage, not zeros — correctness rests on every gate op being
+lane-wise (padding lanes can never contaminate real lanes) plus the
+single final unpack slicing the padding off.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.gate_ir import LogicGraph, compose_graphs
+from repro.core.simulator import SimResult, simulate_pipeline
+from repro.flow.convert import CompiledLayer, convert_layer
+from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
+                                         program_arrays, unpack_bits_jnp)
+
+BACKENDS = ("reference", "pallas", "engine")
+
+
+def input_bits(x: np.ndarray) -> np.ndarray:
+    """Binarize features at the sign/half boundary -> (N, n_features) bool."""
+    return (np.asarray(x, dtype=np.float64) >= 0.5)
+
+
+def hard_forward(params: dict, bits: np.ndarray, n_layers: int
+                 ) -> tuple[list[np.ndarray], np.ndarray]:
+    """Bit-exact binarized inference: hard {0,1} activations in float64.
+
+    This — not the STE float32 training forward — is the semantic spec the
+    logic conversion implements: each hidden activation is
+    ``(2a-1) @ W + b >= 0`` evaluated in float64, matching
+    ``nullanet.neuron_enumerated``/``neuron_isf`` exactly (the float32
+    weights are representable exactly in float64, so the comparison is the
+    same one the spec extraction performed). Returns (per-layer {0,1}
+    activations including the input, float64 logits).
+    """
+    acts = [np.asarray(bits, dtype=np.uint8)]
+    h = 2.0 * acts[0].astype(np.float64) - 1.0
+    for i in range(n_layers - 1):
+        y = h @ np.asarray(params[f"w{i}"], np.float64) \
+            + np.asarray(params[f"b{i}"], np.float64)
+        acts.append((y >= 0).astype(np.uint8))
+        h = 2.0 * acts[-1] - 1.0
+    logits = h @ np.asarray(params[f"w{n_layers - 1}"], np.float64) \
+        + np.asarray(params[f"b{n_layers - 1}"], np.float64)
+    return acts, logits
+
+
+@dataclass
+class LogicClassifier:
+    """Hidden layers as compiled FFCL programs + numeric argmax head."""
+
+    layers: tuple[CompiledLayer, ...]
+    w_out: np.ndarray
+    b_out: np.ndarray
+    n_unit: int
+    alloc: str
+    _stacked: LogicGraph | None = field(default=None, repr=False)
+    _runners: dict = field(default_factory=dict, repr=False)
+    _engine: object = field(default=None, repr=False)
+
+    @property
+    def n_features(self) -> int:
+        return self.layers[0].n_inputs
+
+    @property
+    def n_classes(self) -> int:
+        return int(self.w_out.shape[1])
+
+    @property
+    def programs(self) -> list:
+        return [l.program for l in self.layers]
+
+    @property
+    def stacked_graph(self) -> LogicGraph:
+        """The hidden stack composed into one graph (engine serving path)."""
+        if self._stacked is None:
+            self._stacked = compose_graphs([l.graph for l in self.layers],
+                                           name="hidden-stack")
+        return self._stacked
+
+    # -- execution ----------------------------------------------------------
+
+    def _chain_runner(self, backend: str):
+        """Fused jit for the packed-word chain: pack -> layer programs
+        back-to-back on the word slabs -> one final unpack. Mirrors the
+        serving engine's runner (serve/logic_engine.py) but chains stages
+        input->output instead of concatenating partition outputs."""
+        if backend not in self._runners:
+            arrs = [program_arrays(l.program) for l in self.layers]
+            kw = dict(interpret=True, use_ref=(backend == "reference"))
+
+            def run(bits):
+                words = pack_bits_jnp(bits)
+                for a in arrs:
+                    words = forward_words(
+                        a["src_a"], a["src_b"], a["dst"], a["opcode"],
+                        a["step_branch"], a["output_addrs"], words,
+                        n_addr=a["n_addr"], **kw)
+                return unpack_bits_jnp(words, bits.shape[0])
+
+            self._runners[backend] = jax.jit(run)
+        return self._runners[backend]
+
+    def _serve_engine(self):
+        """Default unpartitioned engine; callers wanting a partition budget
+        or shared cache pass their own engine to :meth:`hidden_bits`."""
+        if self._engine is None:
+            from repro.serve import LogicEngine
+            self._engine = LogicEngine(n_unit=self.n_unit, alloc=self.alloc,
+                                       capacity=256)
+        return self._engine
+
+    def hidden_bits(self, bits: np.ndarray, backend: str = "reference",
+                    engine=None) -> np.ndarray:
+        """(N, n_features) bool -> (N, n_hidden_out) bool through ``backend``."""
+        bits = np.asarray(bits, dtype=bool)
+        if backend in ("reference", "pallas"):
+            return np.asarray(self._chain_runner(backend)(jnp.asarray(bits)))
+        if backend == "engine":
+            eng = engine if engine is not None else self._serve_engine()
+            return eng.serve(self.stacked_graph, bits)
+        raise ValueError(f"unknown backend {backend!r}; use one of {BACKENDS}")
+
+    def logits_from_hidden(self, h: np.ndarray) -> np.ndarray:
+        """The numeric head on hidden bits: ``(2h-1) @ w_out + b_out``,
+        float64 (the one place the head math lives)."""
+        return (2.0 * np.asarray(h, np.float64) - 1.0) \
+            @ np.asarray(self.w_out, np.float64) \
+            + np.asarray(self.b_out, np.float64)
+
+    def logits(self, x: np.ndarray, backend: str = "reference",
+               engine=None) -> np.ndarray:
+        """Binarize -> hidden stack -> numeric head, float64 logits."""
+        h = self.hidden_bits(input_bits(x), backend=backend, engine=engine)
+        return self.logits_from_hidden(h)
+
+    def predict(self, x: np.ndarray, backend: str = "reference",
+                engine=None) -> np.ndarray:
+        return np.argmax(self.logits(x, backend=backend, engine=engine),
+                         axis=-1)
+
+    # -- analysis -----------------------------------------------------------
+
+    def simulate(self, n_input_vectors: int) -> SimResult:
+        """Cycle estimate: the per-layer programs pipelined on one fabric
+        (core/simulator.py double-buffered multi-FFCL model)."""
+        return simulate_pipeline(self.programs, n_input_vectors)
+
+    def layer_stats(self) -> list[dict]:
+        return [{**l.program.stats(),
+                 "n_inputs": l.n_inputs, "n_outputs": l.n_outputs}
+                for l in self.layers]
+
+
+def build_classifier(params: dict, n_layers: int, calib_x: np.ndarray,
+                     *, mode: str = "auto", n_unit: int = 64,
+                     alloc: str = "liveness") -> LogicClassifier:
+    """Convert a trained binarized MLP's hidden stack (all layers).
+
+    Calibration activations come from :func:`hard_forward` on the
+    calibration set, so ISF care-sets are sampled from exactly the
+    function the logic must reproduce.
+    """
+    bits = input_bits(calib_x).astype(np.uint8)
+    acts, _ = hard_forward(params, bits, n_layers)
+    layers = tuple(
+        convert_layer(params[f"w{i}"], params[f"b{i}"], acts[i],
+                      n_unit=n_unit, mode=mode, alloc=alloc,
+                      name=f"layer{i}")
+        for i in range(n_layers - 1))
+    return LogicClassifier(
+        layers=layers,
+        w_out=np.asarray(params[f"w{n_layers - 1}"]),
+        b_out=np.asarray(params[f"b{n_layers - 1}"]),
+        n_unit=n_unit, alloc=alloc)

@@ -1,0 +1,91 @@
+"""The single NN-layer -> FFCL conversion code path (paper §7 NullaNet flow).
+
+Every consumer that turns one binarized layer into executable logic —
+the end-to-end classifier (flow/classifier.py), the transformer FFN swap
+(models/logic_mlp.py), examples, benchmarks — goes through
+:func:`convert_layer`: Boolean-spec extraction (``nullanet.layer_to_graph``:
+ISF or full enumeration per neuron) -> two-level minimization
+(core/espresso.py) -> multi-level restructuring (core/synth.py) ->
+sub-kernel scheduling (``scheduler.compile_graph``). Keeping one code path
+means the degenerate-cover guarantees (constant-true/false neurons, empty
+ISF care-sets — tests/test_conformance.py) hold everywhere.
+
+Weights are cast to float64 *here*, before spec extraction, so the layer's
+Boolean function is defined by exactly one numeric comparison —
+``(2x-1) @ W + b >= 0`` in float64 — and the hard reference forward
+(flow/classifier.py ``hard_forward``) reproduces it bit-for-bit. That is
+what makes the accuracy-parity claim *exact* rather than approximate.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+from repro.core.gate_ir import LogicGraph
+from repro.core.nullanet import layer_to_graph
+from repro.core.scheduler import LogicProgram, compile_graph
+
+
+@dataclass(frozen=True)
+class CompiledLayer:
+    """One hidden layer as both its gate DAG and its compiled program.
+
+    The graph is retained next to the program because the two serve
+    different executors: direct reference / Pallas paths run the program's
+    streams, while the serving engine keys its registry on the graph and
+    compiles (or cache-hits) from it.
+    """
+
+    graph: LogicGraph
+    program: LogicProgram
+
+    @property
+    def n_inputs(self) -> int:
+        return self.graph.n_inputs
+
+    @property
+    def n_outputs(self) -> int:
+        return self.graph.n_outputs
+
+
+def layer_graph(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
+                *, mode: str = "auto", name: str = "layer") -> LogicGraph:
+    """Graph-only conversion of one binarized layer (no scheduling).
+
+    Args:
+      W / b: (fanin, n_neurons) weights and (n_neurons,) bias of the layer
+        (any float dtype; cast to float64 for spec extraction — the parity
+        rule of the module docstring lives here).
+      calib_bits: (N, fanin) {0,1} calibration activations — the observed
+        care-set for ISF mode; unused by full enumeration.
+      mode: 'isf' | 'enum' | 'auto' (enumeration when fanin <= ENUM_LIMIT;
+        enumeration makes the conversion *exact*, see module docstring).
+    """
+    W = np.asarray(W, dtype=np.float64)
+    b = np.asarray(b, dtype=np.float64)
+    return layer_to_graph(np.asarray(calib_bits, dtype=np.uint8), W, b,
+                          mode=mode, name=name)
+
+
+def convert_layer(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
+                  *, n_unit: int, mode: str = "auto",
+                  alloc: str = "liveness", name: str = "layer",
+                  opcode_sort: bool = True, fuse_levels: bool = True
+                  ) -> CompiledLayer:
+    """NullaNet-convert one binarized layer (:func:`layer_graph`) and
+    compile it (``n_unit``/``alloc``/``opcode_sort``/``fuse_levels`` are
+    the core/scheduler.py knobs)."""
+    graph = layer_graph(W, b, calib_bits, mode=mode, name=name)
+    program = compile_graph(graph, n_unit=n_unit, alloc=alloc,
+                            opcode_sort=opcode_sort, fuse_levels=fuse_levels)
+    return CompiledLayer(graph=graph, program=program)
+
+
+def layer_to_program(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
+                     *, n_unit: int, mode: str = "auto",
+                     alloc: str = "liveness", name: str = "layer"
+                     ) -> LogicProgram:
+    """Program-only convenience over :func:`convert_layer`."""
+    return convert_layer(W, b, calib_bits, n_unit=n_unit, mode=mode,
+                         alloc=alloc, name=name).program

@@ -8,12 +8,14 @@ projection is numeric:
     xb = sign01(x);  h = sign01((2xb-1) @ w_in + b_in);  y = (2h-1) @ w_out
 
 Training uses straight-through estimators; after training,
-``ffn_to_program`` runs the NullaNet flow (ISF from calibration data ->
-espresso -> gate factoring -> synth -> sub-kernel scheduling) per layer, and
-``logic_ffn_apply`` executes the xb -> h map as an FFCL *program* — bitwise
-ops only, no w_in matmul, no weight access (paper §7.1's selling point) —
-via the jnp reference semantics (jit-able; the Pallas kernel runs the same
-program on the packed words when called outside jit).
+``ffn_to_program`` converts the xb -> h map per layer through THE flow
+conversion path (flow/convert.py: ISF from calibration data -> espresso ->
+gate factoring -> synth -> sub-kernel scheduling — one code path shared
+with the end-to-end classifier), and ``logic_ffn_apply`` executes it as an
+FFCL *program* — bitwise ops only, no w_in matmul, no weight access (paper
+§7.1's selling point) — via the shared ``forward_words`` core (jit-able;
+the Pallas kernel runs the same program on the packed words when called
+outside jit).
 """
 from __future__ import annotations
 
@@ -21,10 +23,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.nullanet import layer_to_graph
-from repro.core.scheduler import LogicProgram, compile_graph
-from repro.kernels.logic_dsp.ops import program_arrays
-from repro.kernels.logic_dsp.ref import logic_forward_ref
+from repro.core.scheduler import LogicProgram
+from repro.flow.convert import layer_to_program
+from repro.kernels.logic_dsp.ops import (logic_forward, pack_bits_jnp,
+                                         unpack_bits_jnp)
 
 
 def _ste01(y: jnp.ndarray) -> jnp.ndarray:
@@ -44,12 +46,15 @@ def binary_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
 def ffn_to_program(p: dict, calib_bits: np.ndarray, n_unit: int = 64,
                    mode: str = "isf", name: str = "ffn"
                    ) -> LogicProgram:
-    """NullaNet conversion of the xb -> h map of one FFN layer."""
-    w = np.asarray(p["w_in"], np.float64)
-    b = np.asarray(p["b_in"], np.float64)
-    graph = layer_to_graph(calib_bits.astype(np.uint8), w, b, mode=mode,
-                           name=name)
-    return compile_graph(graph, n_unit=n_unit, alloc="liveness")
+    """NullaNet conversion of the xb -> h map of one FFN layer.
+
+    Thin wrapper over :func:`repro.flow.convert.layer_to_program` — the
+    single conversion code path of the repo.
+    """
+    return layer_to_program(p["w_in"], p["b_in"],
+                            np.asarray(calib_bits, dtype=np.uint8),
+                            n_unit=n_unit, mode=mode, alloc="liveness",
+                            name=name)
 
 
 def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray
@@ -57,18 +62,16 @@ def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray
     """Inference through the compiled FFCL program (bitwise ops only).
 
     x (B, S, D) -> y (B, S, D). Bit packing runs along the flattened
-    (B*S) sample axis — the paper's SIMD lanes.
+    (B*S) sample axis — the paper's SIMD lanes. Executes through the same
+    ``forward_words`` core as the end-to-end flow and the serving engine
+    (jnp reference semantics, so the call stays jit-able inside a
+    transformer forward).
     """
-    from repro.kernels.logic_dsp.ops import pack_bits_jnp, unpack_bits_jnp
     bsh = x.shape[:-1]
     d = x.shape[-1]
     xb = (x.astype(jnp.float32) >= 0).reshape(-1, d)          # (N, D) bits
     words = pack_bits_jnp(xb)
-    arrs = program_arrays(prog)
-    out_words = logic_forward_ref(
-        arrs["src_a"], arrs["src_b"], arrs["dst"], arrs["opcode"],
-        words, arrs["output_addrs"], arrs["n_addr"],
-        step_branch=arrs["step_branch"])
+    out_words = logic_forward(prog, words, use_ref=True)
     h = unpack_bits_jnp(out_words, xb.shape[0]).astype(jnp.float32)
     y = (2.0 * h - 1.0) @ p["w_out"].astype(jnp.float32)
     return y.reshape(*bsh, -1).astype(x.dtype)

@@ -1,0 +1,260 @@
+"""Cross-backend differential conformance: every executor, one semantics.
+
+For any well-formed :class:`LogicGraph`, these five evaluations must agree
+bit for bit:
+
+  1. ``LogicGraph.evaluate``           (pure-python/numpy oracle)
+  2. ``scheduler.execute_program_np``  (compiled-program numpy oracle)
+  3. ``logic_forward_ref``             (jnp reference, via use_ref=True)
+  4. the Pallas kernel                 (interpret mode, via use_ref=False)
+  5. Verilog-text round trip           (emit -> parse -> evaluate)
+
+across ``n_unit in {8, 64}`` and both address-allocation modes. The
+deterministic sections always run; the hypothesis property sections add
+randomized coverage when hypothesis is installed (requirements-dev.txt).
+
+The degenerate-cover section is the regression suite for espresso/NullaNet
+corners: constant-true / constant-false neurons, empty ISF care-sets,
+pass-through and constant outputs, gateless programs — ``layer_to_graph``
+must never emit a graph any backend cannot simulate.
+"""
+import numpy as np
+import pytest
+
+from repro.core import espresso
+from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, OpCode,
+                                random_graph)
+from repro.core.nullanet import layer_to_graph
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.synth import optimize
+from repro.core.verilog import emit_verilog, parse_verilog
+from repro.kernels.logic_dsp.ops import logic_infer_bits
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # tier-1 containers may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+N_UNITS = (8, 64)
+ALLOCS = ("direct", "liveness")
+
+
+def assert_conformance(graph: LogicGraph, bits: np.ndarray,
+                       n_units=N_UNITS, allocs=ALLOCS) -> None:
+    """All five backends agree with ``graph.evaluate`` on ``bits``."""
+    bits = np.asarray(bits, dtype=bool)
+    want = graph.evaluate(bits)
+    got_v = parse_verilog(emit_verilog(graph)).evaluate(bits)
+    assert (got_v == want).all(), "verilog round-trip diverged"
+    for n_unit in n_units:
+        for alloc in allocs:
+            prog = compile_graph(graph, n_unit=n_unit, alloc=alloc)
+            ctx = f"n_unit={n_unit} alloc={alloc}"
+            got_np = execute_program_np(prog, bits)
+            assert (got_np == want).all(), f"execute_program_np ({ctx})"
+            got_ref = logic_infer_bits(prog, bits, use_ref=True)
+            assert (got_ref == want).all(), f"jnp reference ({ctx})"
+            got_k = logic_infer_bits(prog, bits, use_ref=False)
+            assert (got_k == want).all(), f"pallas interpret ({ctx})"
+
+
+def _bits(rng, batch, n_inputs):
+    return rng.integers(0, 2, (batch, n_inputs)).astype(bool)
+
+
+# ---------------------------------------------------------------------------
+# deterministic differential sweep
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n_inputs,n_gates,n_outputs,unary_frac,locality",
+                         [(0, 8, 200, 8, 0.1, 64),
+                          (1, 4, 30, 4, 0.3, 8),    # narrow fan-in, unary-rich
+                          (2, 16, 500, 16, 0.05, 256),  # wide fan-in, deep
+                          (3, 2, 5, 2, 0.5, 4),
+                          (4, 10, 64, 10, 0.0, 16)])
+def test_random_graph_conformance(seed, n_inputs, n_gates, n_outputs,
+                                  unary_frac, locality):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_inputs, n_gates, n_outputs,
+                     unary_frac=unary_frac, locality=locality)
+    assert_conformance(g, _bits(rng, 45, n_inputs))
+
+
+def test_single_gate_graphs(rng):
+    """Every opcode as the lone gate, including both unary ops and NOP."""
+    for op in OpCode:
+        g = LogicGraph(2, name=f"single-{op.name}")
+        g.set_outputs([g.add_gate(op, g.input_wire(0), g.input_wire(1))])
+        assert_conformance(g, _bits(rng, 33, 2))
+
+
+def test_constant_and_passthrough_outputs(rng):
+    """Outputs at CONST0/CONST1/input wires need no gates at all."""
+    g = LogicGraph(3, name="degenerate-outs")
+    w = g.add_gate(OpCode.XNOR, g.input_wire(0), g.input_wire(2))
+    g.set_outputs([CONST0, CONST1, g.input_wire(1), w, CONST1])
+    assert_conformance(g, _bits(rng, 40, 3))
+
+
+def test_gateless_graph(rng):
+    """0 steps: pallas cannot take (0, n_unit) streams; must route to ref."""
+    g = LogicGraph(2, name="gateless")
+    g.set_outputs([g.input_wire(1), CONST1, g.input_wire(0)])
+    assert_conformance(g, _bits(rng, 39, 2))
+
+
+def test_duplicated_outputs(rng):
+    """The same wire exported at several output positions."""
+    g = LogicGraph(2, name="dup")
+    w = g.add_gate(OpCode.NAND, g.input_wire(0), g.input_wire(1))
+    g.set_outputs([w, w, g.input_wire(0), w])
+    assert_conformance(g, _bits(rng, 21, 2))
+
+
+def test_deep_chain(rng):
+    """Depth >> n_unit: one gate per level, exercises level raggedness."""
+    g = LogicGraph(2, name="chain")
+    w = g.input_wire(0)
+    for k in range(120):
+        w = g.add_gate(OpCode.XOR if k % 3 else OpCode.NAND, w,
+                       g.input_wire(k % 2))
+        if k % 7 == 0:
+            w = g.add_gate(OpCode.NOT, w)
+    g.set_outputs([w])
+    assert_conformance(g, _bits(rng, 64, 2))
+
+
+def test_real_nop_gates(rng):
+    """A *real* NOP gate (not padding) drives constant 0 on its wire and
+    must survive scheduling homogeneity and the Verilog round trip."""
+    g = LogicGraph(2, name="nop")
+    nop = g.add_gate(OpCode.NOP, g.input_wire(0), g.input_wire(1))
+    both = g.add_gate(OpCode.OR, nop, g.input_wire(1))
+    g.set_outputs([nop, both])
+    assert_conformance(g, _bits(rng, 37, 2))
+
+
+# ---------------------------------------------------------------------------
+# espresso / NullaNet degenerate covers (regression suite)
+# ---------------------------------------------------------------------------
+
+def all_patterns(n: int) -> np.ndarray:
+    return ((np.arange(2 ** n)[:, None] >> np.arange(n)[None, :]) & 1
+            ).astype(np.uint8)
+
+
+def test_constant_false_neuron_minimizes_to_empty_cover():
+    cubes = espresso.minimize(np.zeros((0, 4), np.uint8), all_patterns(4))
+    assert cubes == []
+    g = optimize(espresso.sop_to_graph([cubes], n_inputs=4))
+    assert g.n_gates == 0 and g.outputs == [CONST0]
+    assert_conformance(g, all_patterns(4).astype(bool))
+
+
+def test_constant_true_neuron_minimizes_to_tautology():
+    pats = all_patterns(4)
+    cubes = espresso.minimize(pats, np.zeros((0, 4), np.uint8))
+    assert len(cubes) == 1 and not cubes[0][0].any()   # literal-free cube
+    g = optimize(espresso.sop_to_graph([cubes], n_inputs=4))
+    assert g.n_gates == 0 and g.outputs == [CONST1]
+    assert_conformance(g, pats.astype(bool))
+
+
+def test_empty_isf_care_set():
+    """Zero calibration rows: every pattern is don't-care; layer_to_graph
+    must still emit a simulatable (constant) graph."""
+    g = layer_to_graph(np.zeros((0, 5), np.uint8), np.ones((5, 3)),
+                       np.zeros(3), mode="isf")
+    assert g.n_outputs == 3
+    assert_conformance(g, all_patterns(5).astype(bool))
+
+
+def test_layer_with_constant_and_live_neurons():
+    """A layer mixing always-on, always-off, and input-dependent neurons
+    (saturated biases) compiles and matches the float64 sign spec."""
+    W = np.array([[1.0, 1.0, 1.0], [1.0, -1.0, 1.0]])
+    b = np.array([50.0, 0.0, -50.0])     # always-on / live / always-off
+    pats = all_patterns(2)
+    for mode in ("enum", "isf"):
+        g = layer_to_graph(pats, W, b, mode=mode)
+        want = ((2.0 * pats - 1.0) @ W + b) >= 0
+        assert (g.evaluate(pats.astype(bool)) == want).all()
+        assert_conformance(g, pats.astype(bool))
+
+
+def test_zero_neuron_layer():
+    g = layer_to_graph(all_patterns(3), np.zeros((3, 0)), np.zeros(0))
+    assert g.n_outputs == 0
+    prog = compile_graph(g, n_unit=8)
+    out = execute_program_np(prog, all_patterns(3).astype(bool))
+    assert out.shape == (8, 0)
+
+
+def test_engine_serves_gateless_and_constant_graphs(rng):
+    """The serving engine must handle degenerate programs end to end."""
+    from repro.serve import LogicEngine
+    eng = LogicEngine(n_unit=8, capacity=64)
+    g = LogicGraph(3, name="deg")
+    g.set_outputs([CONST1, g.input_wire(2), CONST0])
+    bits = _bits(rng, 50, 3)
+    assert (eng.serve(g, bits) == g.evaluate(bits)).all()
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property coverage
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def graph_cases(draw):
+        """Random graphs with varied fan-in, opcode mix, depth, and
+        degenerate output sets (constants / inputs / duplicates)."""
+        seed = draw(st.integers(0, 10 ** 6))
+        n_inputs = draw(st.integers(1, 12))
+        n_gates = draw(st.integers(0, 150))
+        unary_frac = draw(st.sampled_from([0.0, 0.1, 0.4]))
+        locality = draw(st.sampled_from([2, 8, 64]))
+        rng = np.random.default_rng(seed)
+        if n_gates:
+            g = random_graph(rng, n_inputs, n_gates,
+                             min(4, n_gates), unary_frac=unary_frac,
+                             locality=locality)
+        else:
+            g = LogicGraph(n_inputs, name="gateless")
+            g.set_outputs([g.input_wire(0)])
+        extras = draw(st.lists(
+            st.sampled_from([CONST0, CONST1, 2]), max_size=3))
+        if extras:
+            g.set_outputs(list(g.outputs) + extras)
+        batch = draw(st.sampled_from([1, 31, 32, 45]))
+        return g, _bits(rng, batch, n_inputs)
+
+    @settings(max_examples=40, deadline=None)
+    @given(graph_cases(), st.sampled_from(N_UNITS), st.sampled_from(ALLOCS))
+    def test_property_conformance(case, n_unit, alloc):
+        g, bits = case
+        assert_conformance(g, bits, n_units=(n_unit,), allocs=(alloc,))
+
+    @settings(max_examples=15, deadline=None)
+    @given(st.integers(0, 10 ** 6), st.integers(1, 6), st.integers(1, 5))
+    def test_property_layer_to_graph_conformance(seed, fanin, n_neurons):
+        """NullaNet layers (enum + isf) are simulatable by every backend
+        and match the float64 sign spec where defined."""
+        rng = np.random.default_rng(seed)
+        W = rng.normal(size=(fanin, n_neurons))
+        b = rng.normal(size=n_neurons) * 2.0
+        pats = all_patterns(fanin)
+        calib = pats[rng.random(len(pats)) < 0.6]
+        want = ((2.0 * pats - 1.0) @ W + b) >= 0
+        g_enum = layer_to_graph(calib, W, b, mode="enum")
+        assert (g_enum.evaluate(pats.astype(bool)) == want).all()
+        assert_conformance(g_enum, pats.astype(bool),
+                           n_units=(8,), allocs=("liveness",))
+        g_isf = layer_to_graph(calib, W, b, mode="isf")
+        if len(calib):
+            assert (g_isf.evaluate(calib.astype(bool))
+                    == (((2.0 * calib - 1.0) @ W + b) >= 0)).all()
+        assert_conformance(g_isf, pats.astype(bool),
+                           n_units=(8,), allocs=("direct",))

@@ -1,0 +1,228 @@
+"""End-to-end flow: packed-word layer handoff, composition, accuracy parity.
+
+The packed-handoff contract (DESIGN.md §6): chaining per-layer programs at
+the word level — layer k's packed (n_out, W) output slab fed directly as
+layer k+1's packed input slab — must equal per-layer execution with an
+unpack -> repack round-trip between layers, bit for bit, including sample
+counts that do not fill the last 32-bit word.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.gate_ir import LogicGraph, OpCode, compose_graphs
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.flow import (FlowConfig, build_classifier, convert_layer,
+                        hard_forward, input_bits, layer_to_program, run_flow)
+from repro.kernels.logic_dsp.ops import (forward_words, logic_infer_bits,
+                                         pack_bits_jnp, program_arrays,
+                                         unpack_bits_jnp)
+
+
+# ---------------------------------------------------------------------------
+# hand-computable 2-layer fixture
+# ---------------------------------------------------------------------------
+
+def _layer_a() -> LogicGraph:
+    """3 inputs -> 2 outputs: o0 = i0 & i1, o1 = i1 ^ i2."""
+    g = LogicGraph(3, name="A")
+    i0, i1, i2 = g.input_wire(0), g.input_wire(1), g.input_wire(2)
+    g.set_outputs([g.add_gate(OpCode.AND, i0, i1),
+                   g.add_gate(OpCode.XOR, i1, i2)])
+    return g
+
+
+def _layer_b() -> LogicGraph:
+    """2 inputs -> 2 outputs: p0 = a0 | a1, p1 = ~a0."""
+    g = LogicGraph(2, name="B")
+    a0, a1 = g.input_wire(0), g.input_wire(1)
+    g.set_outputs([g.add_gate(OpCode.OR, a0, a1),
+                   g.add_gate(OpCode.NOT, a0)])
+    return g
+
+
+def _expected(bits: np.ndarray) -> np.ndarray:
+    i0, i1, i2 = bits[:, 0], bits[:, 1], bits[:, 2]
+    a0, a1 = i0 & i1, i1 ^ i2
+    return np.stack([a0 | a1, ~a0], axis=1)
+
+
+@pytest.mark.parametrize("alloc", ["direct", "liveness"])
+@pytest.mark.parametrize("batch", [1, 31, 32, 33, 70])
+def test_packed_handoff_matches_unpack_repack(rng, alloc, batch):
+    """Chained words == per-layer unpack->repack == hand truth, bit for bit."""
+    ga, gb = _layer_a(), _layer_b()
+    pa = compile_graph(ga, n_unit=8, alloc=alloc)
+    pb = compile_graph(gb, n_unit=8, alloc=alloc)
+    bits = rng.integers(0, 2, (batch, 3)).astype(bool)
+
+    # packed handoff: pack once, words flow layer to layer
+    words = pack_bits_jnp(jnp.asarray(bits))
+    for prog in (pa, pb):
+        a = program_arrays(prog)
+        words = forward_words(a["src_a"], a["src_b"], a["dst"], a["opcode"],
+                              a["step_branch"], a["output_addrs"], words,
+                              n_addr=a["n_addr"], use_ref=True)
+    chained = np.asarray(unpack_bits_jnp(words, batch))
+
+    # per-layer round-trips (kernel + numpy oracle)
+    h = logic_infer_bits(pa, bits)
+    per_layer = logic_infer_bits(pb, h)
+    np_h = execute_program_np(pa, bits)
+    np_out = execute_program_np(pb, np_h)
+
+    expected = _expected(bits)
+    assert (chained == per_layer).all()
+    assert (chained == np_out).all()
+    assert (chained == expected).all()
+
+
+@pytest.mark.parametrize("batch", [33, 64])
+def test_padding_lanes_stay_clean(rng, batch):
+    """Zero padding in the last word must not leak into real samples: the
+    same samples must produce identical outputs at any batch position."""
+    ga, gb = _layer_a(), _layer_b()
+    pa = compile_graph(ga, n_unit=8, alloc="liveness")
+    pb = compile_graph(gb, n_unit=8, alloc="liveness")
+    bits = rng.integers(0, 2, (batch, 3)).astype(bool)
+    out_full = logic_infer_bits(pb, logic_infer_bits(pa, bits))
+    head = bits[:17]
+    out_head = logic_infer_bits(pb, logic_infer_bits(pa, head))
+    assert (out_full[:17] == out_head).all()
+
+
+def test_compose_graphs_equals_chain(rng):
+    ga, gb = _layer_a(), _layer_b()
+    stacked = compose_graphs([ga, gb])
+    bits = rng.integers(0, 2, (40, 3)).astype(bool)
+    assert (stacked.evaluate(bits) == _expected(bits)).all()
+    prog = compile_graph(stacked, n_unit=8, alloc="liveness")
+    assert (execute_program_np(prog, bits) == _expected(bits)).all()
+
+
+def test_compose_graphs_degenerate_stages(rng):
+    """Constant and pass-through stage outputs compose exactly."""
+    g1 = LogicGraph(2, name="const-ish")
+    # outputs: const1, input0 (pass-through), one real gate
+    g1.set_outputs([1, g1.input_wire(0),
+                    g1.add_gate(OpCode.NOR, g1.input_wire(0),
+                                g1.input_wire(1))])
+    g2 = LogicGraph(3, name="top")
+    g2.set_outputs([g2.add_gate(OpCode.AND, g2.input_wire(0),
+                                g2.input_wire(2)),
+                    g2.input_wire(1)])
+    stacked = compose_graphs([g1, g2])
+    bits = rng.integers(0, 2, (16, 2)).astype(bool)
+    i0, i1 = bits[:, 0], bits[:, 1]
+    expected = np.stack([np.ones_like(i0) & ~(i0 | i1), i0], axis=1)
+    assert (stacked.evaluate(bits) == expected).all()
+
+
+def test_compose_graphs_width_mismatch():
+    g1 = _layer_a()          # 2 outputs
+    g3 = LogicGraph(3)       # expects 3 inputs
+    g3.set_outputs([g3.input_wire(0)])
+    with pytest.raises(ValueError, match="expects 3 inputs"):
+        compose_graphs([g1, g3])
+    with pytest.raises(ValueError, match="at least one"):
+        compose_graphs([])
+
+
+# ---------------------------------------------------------------------------
+# conversion path + classifier parity
+# ---------------------------------------------------------------------------
+
+def test_convert_layer_enum_is_exact(rng):
+    """Enumerated conversion reproduces the float64 sign comparison on
+    every input pattern (the basis of the parity claim)."""
+    W = rng.normal(size=(6, 4)).astype(np.float32)
+    b = rng.normal(size=4).astype(np.float32)
+    layer = convert_layer(W, b, np.zeros((0, 6), np.uint8),
+                          n_unit=8, mode="enum", name="t")
+    pats = ((np.arange(64)[:, None] >> np.arange(6)[None, :]) & 1
+            ).astype(np.uint8)
+    want = ((2.0 * pats - 1.0) @ W.astype(np.float64)
+            + b.astype(np.float64)) >= 0
+    assert (layer.graph.evaluate(pats.astype(bool)) == want).all()
+    assert (execute_program_np(layer.program, pats.astype(bool))
+            == want).all()
+
+
+def test_classifier_three_backends_bit_identical(rng):
+    """Small trained-free classifier: random weights, all three execution
+    paths must agree with hard_forward bit for bit."""
+    params = {
+        "w0": rng.normal(size=(7, 5)).astype(np.float32),
+        "b0": rng.normal(size=5).astype(np.float32),
+        "w1": rng.normal(size=(5, 4)).astype(np.float32),
+        "b1": rng.normal(size=4).astype(np.float32),
+        "w2": rng.normal(size=(4, 3)).astype(np.float32),
+        "b2": np.zeros(3, np.float32),
+    }
+    x = rng.integers(0, 2, (77, 7)).astype(np.uint8)
+    clf = build_classifier(params, 3, x, n_unit=8)
+    bits = input_bits(x)
+    acts, logits = hard_forward(params, bits, 3)
+    outs = {b: clf.hidden_bits(bits, backend=b)
+            for b in ("reference", "pallas", "engine")}
+    for name, h in outs.items():
+        assert (h == acts[-1].astype(bool)).all(), name
+    assert (clf.predict(x) == np.argmax(logits, -1)).all()
+
+
+def test_classifier_engine_partitioned_matches(rng):
+    """Engine serving with a partition budget (pipelined multi-program
+    sequence over the composed stack) stays bit-identical."""
+    from repro.serve import LogicEngine
+    params = {
+        "w0": rng.normal(size=(6, 5)).astype(np.float32),
+        "b0": rng.normal(size=5).astype(np.float32),
+        "w1": rng.normal(size=(5, 2)).astype(np.float32),
+        "b1": np.zeros(2, np.float32),
+    }
+    x = rng.integers(0, 2, (40, 6)).astype(np.uint8)
+    clf = build_classifier(params, 2, x, n_unit=8)
+    bits = input_bits(x)
+    ref = clf.hidden_bits(bits, backend="reference")
+    budget = max(2, clf.stacked_graph.n_gates // 3)
+    eng = LogicEngine(n_unit=8, capacity=64, max_gates=budget)
+    got = clf.hidden_bits(bits, backend="engine", engine=eng)
+    assert (got == ref).all()
+    entry = eng.cache.get(clf.stacked_graph, 8, "liveness", budget)
+    assert len(entry.programs) > 1     # the budget actually partitioned
+
+
+def test_ffn_to_program_wrapper_matches_flow(rng):
+    """models/logic_mlp.ffn_to_program is a thin wrapper over the flow
+    conversion path: identical program streams for identical inputs."""
+    from repro.models.logic_mlp import ffn_to_program
+    p = {"w_in": rng.normal(size=(6, 4)).astype(np.float32),
+         "b_in": rng.normal(size=4).astype(np.float32)}
+    calib = rng.integers(0, 2, (50, 6)).astype(np.uint8)
+    via_model = ffn_to_program(p, calib, n_unit=8, mode="isf")
+    via_flow = layer_to_program(p["w_in"], p["b_in"], calib,
+                                n_unit=8, mode="isf", alloc="liveness")
+    assert (via_model.src_a == via_flow.src_a).all()
+    assert (via_model.opcode == via_flow.opcode).all()
+    assert via_model.n_addr == via_flow.n_addr
+
+
+@pytest.mark.slow
+def test_run_flow_exact_parity():
+    """The acceptance criterion, small: logic acc == binarized acc exactly,
+    all backends bit-identical, flow stats populated."""
+    cfg = FlowConfig(n_features=8, hidden=(6, 5), n_classes=3,
+                     n_samples=700, train_steps=60, n_unit=16)
+    assert cfg.exact
+    report, clf = run_flow(cfg)
+    assert report.parity
+    assert report.bit_identical
+    assert report.exact_mode
+    assert set(report.logic_acc) == {"reference", "pallas", "engine"}
+    assert all(acc == report.binarized_acc
+               for acc in report.logic_acc.values())
+    assert len(report.layers) == 2
+    assert report.n_gates == sum(l.program.n_gates for l in clf.layers)
+    assert report.sim_cycles > 0
+    d = report.to_dict()
+    assert d["parity"] and d["logic_acc"]["pallas"] == report.binarized_acc
