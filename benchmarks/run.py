@@ -232,9 +232,10 @@ def bench_serve_logic(quick: bool) -> None:
         f"occ={st['mean_occupancy']:.0%}")
 
     # single-shot baseline: one fabric invocation per request (per-shape
-    # jits warmed; the gap left is the engine's batching amortization)
+    # jits warmed; same optimized netlist as the engine serves, so the
+    # gap left is the engine's batching amortization)
     from repro.kernels.logic_dsp import logic_infer_bits
-    prog = compile_graph(g, n_unit=64, alloc="liveness")
+    prog = compile_graph(g, n_unit=64, alloc="liveness", optimize="default")
     for bits in reqs:
         logic_infer_bits(prog, bits)
     t0 = time.perf_counter()
@@ -274,8 +275,8 @@ def bench_serve_logic(quick: bool) -> None:
         for uid in uids:
             peng.result(uid)
     dt_part = (time.perf_counter() - t0) / reps
-    n_parts = len(peng.cache.get(g, peng.n_unit, peng.alloc,
-                                 peng.max_gates).programs)
+    n_parts = len(peng.cache.get(g, peng.n_unit, peng.alloc, peng.max_gates,
+                                 pipeline=peng.pipeline).programs)
     row("serve.logic_dsp.partitioned", dt_part * 1e6,
         f"programs={n_parts} samples_per_s={total / dt_part:.0f} "
         f"vs_mono={dt_part / dt:.2f}x")
@@ -353,6 +354,67 @@ def bench_compile(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# gate-level optimization pipeline (core/opt.py): gate/step/compile deltas
+# ---------------------------------------------------------------------------
+
+def bench_opt(quick: bool) -> None:
+    """``opt.*`` rows: what the default pass pipeline buys versus raw
+    synthesis on (a) the e2e NullaNet workload and (b) a random-graph
+    stress case — gate count, scheduled steps, and compile wall-clock.
+    ``us`` is the pass-pipeline wall-clock itself (the price paid once
+    per distinct structure; the serving registry memoizes it)."""
+    from repro.core.nullanet import (BinaryMLPConfig, train_binary_mlp)
+    from repro.core.opt import PassManager
+    from repro.flow import FlowConfig, hard_forward, input_bits
+    from repro.flow.convert import layer_graph
+
+    def ab_rows(tag: str, raw_graphs: list, n_unit: int) -> None:
+        pm = PassManager.default()
+        t0 = time.perf_counter()
+        opt_graphs = [pm.run(g).graph for g in raw_graphs]
+        opt_us = (time.perf_counter() - t0) * 1e6
+        g_raw = sum(g.n_gates for g in raw_graphs)
+        g_opt = sum(g.n_gates for g in opt_graphs)
+        row(f"opt.{tag}.gates", opt_us,
+            f"raw={g_raw} opt={g_opt} ({(g_opt - g_raw) / g_raw:+.0%})")
+        t0 = time.perf_counter()
+        s_raw = sum(compile_graph(g, n_unit=n_unit, alloc="liveness").n_steps
+                    for g in raw_graphs)
+        raw_c = (time.perf_counter() - t0) * 1e6
+        t0 = time.perf_counter()
+        s_opt = sum(compile_graph(g, n_unit=n_unit, alloc="liveness").n_steps
+                    for g in opt_graphs)
+        opt_c = (time.perf_counter() - t0) * 1e6
+        row(f"opt.{tag}.steps", opt_c,
+            f"raw={s_raw} opt={s_opt} ({(s_opt - s_raw) / s_raw:+.0%}) "
+            f"raw_compile_us={raw_c:.0f}")
+
+    # (a) the e2e NullaNet classifier workload (same config family as
+    # flow.e2e.*): every hidden layer, raw espresso factoring vs pipeline
+    cfg = FlowConfig(n_features=10 if quick else 12,
+                     hidden=(8, 6) if quick else (10, 8),
+                     n_classes=4, n_samples=1200 if quick else 4000,
+                     train_steps=120 if quick else 300, n_unit=32)
+    xt, yt, _, _ = cfg.load_data()
+    mcfg = BinaryMLPConfig(n_features=cfg.n_features, hidden=cfg.hidden,
+                           n_classes=cfg.n_classes, seed=cfg.seed)
+    n_layers = len(cfg.hidden) + 1
+    params = train_binary_mlp(mcfg, xt, yt, steps=cfg.train_steps)
+    params_np = {k: np.asarray(v) for k, v in params.items()}
+    acts, _ = hard_forward(params_np, input_bits(xt).astype(np.uint8),
+                           n_layers)
+    raw_layers = [layer_graph(params_np[f"w{i}"], params_np[f"b{i}"],
+                              acts[i], name=f"layer{i}", optimize="none")
+                  for i in range(n_layers - 1)]
+    ab_rows("nullanet", raw_layers, cfg.n_unit)
+
+    # (b) random-graph stress: duplicate cones + dead fanout by design
+    rng = np.random.default_rng(11)
+    big = random_graph(rng, 64, 3000 if quick else 10_000, 48, locality=128)
+    ab_rows("random", [big], 256)
+
+
+# ---------------------------------------------------------------------------
 # pipelining ablation (paper Fig. 8 a/b)
 # ---------------------------------------------------------------------------
 
@@ -382,6 +444,7 @@ def main() -> None:
     bench_resources(args.quick)
     bench_pipelining(args.quick)
     bench_compile(args.quick)
+    bench_opt(args.quick)
     bench_kernels(args.quick)
     bench_serve_logic(args.quick)
     bench_flow_e2e(args.quick)

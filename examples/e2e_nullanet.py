@@ -44,6 +44,10 @@ def main() -> None:
     ap.add_argument("--alloc", choices=("direct", "liveness"),
                     default="liveness")
     ap.add_argument("--mode", choices=("auto", "enum", "isf"), default="auto")
+    ap.add_argument("--optimize", choices=("default", "none"),
+                    default="default",
+                    help="gate-level pass pipeline (core/opt.py); 'none' "
+                         "keeps raw espresso factoring for A/B comparison")
     ap.add_argument("--max-gates", type=int, default=None,
                     help="engine partition budget (pipelined sub-programs)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -58,7 +62,7 @@ def main() -> None:
         n_samples=quick_default(args.samples, 1500, 4000),
         train_steps=quick_default(args.train_steps, 120, 300),
         n_unit=args.n_unit, alloc=args.alloc, mode=args.mode,
-        max_gates=args.max_gates)
+        optimize=args.optimize, max_gates=args.max_gates)
 
     report, _ = run_flow(cfg, log_every=0 if args.quick else 100)
     print(report.summary())

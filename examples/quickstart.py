@@ -11,8 +11,8 @@ import numpy as np
 
 from repro.core.cost_model import CostModel, FfclStats
 from repro.core.levelize import levelize
+from repro.core.opt import PassManager
 from repro.core.scheduler import compile_graph
-from repro.core.synth import optimize
 from repro.core.verilog import parse_verilog
 from repro.kernels.logic_dsp import logic_infer_bits
 
@@ -36,9 +36,11 @@ endmodule
 def main() -> None:
     graph = parse_verilog(VERILOG)
     print(f"parsed: {graph.stats()}")
-    graph = optimize(graph)
+    res = PassManager.default().run(graph)   # pass-based optimization
+    graph = res.graph
     lv = levelize(graph)
-    print(f"synthesized: {graph.stats()}  level histogram={list(lv.histogram())}")
+    print(f"synthesized ({res.iterations} pipeline iters): {graph.stats()}  "
+          f"level histogram={list(lv.histogram())}")
 
     n_unit = 4
     prog = compile_graph(graph, n_unit=n_unit, alloc="liveness")

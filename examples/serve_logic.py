@@ -61,7 +61,10 @@ def main() -> None:
     x = rng.integers(0, 2, (130, 24)).astype(bool)
     out = part_engine.serve(big, x)
     assert (out == big.evaluate(x)).all()
-    entry = part_engine.cache.get(big, 64, "liveness", 600)
+    # keyed on the POST-optimization fingerprint: fetch with the engine's
+    # pipeline to get the entry it actually served
+    entry = part_engine.cache.get(big, 64, "liveness", 600,
+                                  pipeline=part_engine.pipeline)
     print(f"over-budget graph ({big.n_gates} gates) served as "
           f"{len(entry.programs)} pipelined sub-programs  [bit-exact]")
 

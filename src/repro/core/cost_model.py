@@ -21,7 +21,7 @@ beat), delta (input words per beat), zeta (opcodes per beat).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 
 import numpy as np
 
@@ -135,8 +135,22 @@ class FfclStats:
             n_unit_scheduled=prog.n_unit)
 
     @staticmethod
-    def from_graph(graph) -> "FfclStats":
+    def from_graph(graph, optimized=False) -> "FfclStats":
+        """Closed-form (eq. 23-path) stats of a graph.
+
+        ``optimized`` is the shared core/opt.py knob (``True`` /
+        ``"default"`` for the default pass pipeline, a ``PassManager``
+        for a custom one, ``False`` / ``"none"`` for raw): design-space
+        sweeps (``optimizer.sweep``/``binary_search``) should probe the
+        post-optimization gate counts the scheduler will actually emit —
+        probing raw synthesis output systematically overstates both the
+        compute and address-stream terms of eq. 22.
+        """
         from repro.core.levelize import levelize
+        from repro.core.opt import resolve_pipeline
+        pipeline = resolve_pipeline(optimized)
+        if pipeline is not None:
+            graph = pipeline.run(graph).graph
         lv = levelize(graph)
         return FfclStats(graph.n_gates, lv.depth, graph.n_inputs,
                          graph.n_outputs, lv.histogram())

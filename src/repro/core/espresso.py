@@ -174,12 +174,17 @@ def _balanced_tree(graph: LogicGraph, op: OpCode, leaves: list[int],
 
 
 def sop_to_graph(cube_sets: list[list[tuple[np.ndarray, np.ndarray]]],
-                 n_inputs: int, name: str = "sop") -> LogicGraph:
+                 n_inputs: int, name: str = "sop",
+                 optimize="none") -> LogicGraph:
     """Factor one-or-more SOPs (sharing inputs) into a 2-input gate DAG.
 
-    ``cube_sets[k]`` is the SOP of output k. Literals and AND/OR subtrees are
-    shared across outputs via hash-consing; run ``synth.optimize`` after for
-    further sharing/depth reduction.
+    ``cube_sets[k]`` is the SOP of output k. Literals and AND/OR subtrees
+    are shared across outputs via hash-consing. ``optimize`` routes the
+    factored graph through the gate-level pass pipeline (core/opt.py:
+    ``"default"`` | ``"none"`` | a ``PassManager``) for further
+    sharing/depth reduction — the same default pipeline every synthesis
+    consumer uses; ``"none"`` keeps the raw factoring (the doctests and
+    the paper-exact scheduling contract).
     """
     g = LogicGraph(n_inputs, name=name)
     cache: dict = {}
@@ -202,4 +207,6 @@ def sop_to_graph(cube_sets: list[list[tuple[np.ndarray, np.ndarray]]],
             terms.append(_balanced_tree(g, OpCode.AND, lits, cache))
         outputs.append(_balanced_tree(g, OpCode.OR, terms, cache))
     g.set_outputs(outputs)
-    return g
+    from repro.core.opt import resolve_pipeline   # local import, no cycle
+    pipeline = resolve_pipeline(optimize)
+    return pipeline.run(g).graph if pipeline is not None else g

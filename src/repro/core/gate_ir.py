@@ -208,8 +208,57 @@ class LogicGraph:
         }
 
     def copy(self) -> "LogicGraph":
-        return LogicGraph(self.n_inputs, list(self.gates),
-                          list(self.outputs), self.name)
+        """Shallow structural copy. The memoized fingerprint carries over
+        (structure is identical), so copying a served graph does not
+        force an O(n_gates) rehash on the copy's first cache lookup."""
+        g = LogicGraph(self.n_inputs, list(self.gates),
+                       list(self.outputs), self.name)
+        cached = getattr(self, "_fingerprint_cache", None)
+        if cached is not None:
+            g._fingerprint_cache = cached
+        return g
+
+
+def remap_wires(remap: Sequence[int] | np.ndarray, wires: Iterable[int],
+                n_wires: int | None = None, *,
+                what: str = "wire") -> list[int]:
+    """Map wire ids through an old-wire -> new-wire ``remap``, validated.
+
+    The optimization passes (core/opt.py) and any consumer applying their
+    remaps (output lists, partition bookkeeping, layer chaining) go
+    through here instead of raw fancy-indexing: a wire outside the
+    remap's domain, a wire the rewrite dropped (``remap[w] == -1``), or a
+    target at/after ``n_wires`` raises ``ValueError`` — instead of the
+    silent corruption a negative index or a stale id would cause
+    downstream (numpy happily gathers ``arr[-1]``).
+
+    Args:
+      remap: old-wire -> new-wire map; ``-1`` marks dropped wires.
+      wires: old wire ids to translate.
+      n_wires: when given, every translated id must be ``< n_wires`` —
+        pass the new graph's wire count to catch out-of-range targets, or
+        a gate's own new wire id to catch forward references (an operand
+        that does not precede its gate).
+      what: noun used in error messages (``"output"``, ``"operand"``...).
+    """
+    remap = np.asarray(remap, dtype=np.int64)
+    out: list[int] = []
+    for w in wires:
+        w = int(w)
+        if not 0 <= w < len(remap):
+            raise ValueError(
+                f"{what} {w} outside the remap domain [0, {len(remap)})")
+        v = int(remap[w])
+        if v < 0:
+            raise ValueError(
+                f"{what} {w} was dropped by the rewrite (remap is -1) "
+                "but is still referenced")
+        if n_wires is not None and v >= n_wires:
+            raise ValueError(
+                f"{what} {w} maps to wire {v}, which is out of range / a "
+                f"forward reference (must be < {n_wires})")
+        out.append(v)
+    return out
 
 
 def compose_graphs(graphs: Sequence["LogicGraph"],

@@ -48,6 +48,6 @@ def levelize(graph: LogicGraph) -> Levelization:
     by_level = np.argsort(gate_levels, kind="stable")
     bounds = np.searchsorted(gate_levels[by_level],
                              np.arange(1, depth + 2))
-    level_gates = [by_level[bounds[l]:bounds[l + 1]]
-                   for l in range(depth)]
+    level_gates = [by_level[bounds[lev]:bounds[lev + 1]]
+                   for lev in range(depth)]
     return Levelization(levels=levels, depth=depth, level_gates=level_gates)

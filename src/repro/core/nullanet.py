@@ -10,7 +10,6 @@ compiler (scheduler.py). First/last layers stay full-precision (paper §8.3).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Sequence
 
 import jax
 import jax.numpy as jnp
@@ -18,7 +17,6 @@ import numpy as np
 
 from repro.core import espresso
 from repro.core.gate_ir import LogicGraph
-from repro.core.synth import optimize
 from repro.optim import adamw_init, adamw_update
 
 ENUM_LIMIT = 14  # paper §7.1: enumeration applicable to <= ~14 inputs
@@ -152,10 +150,13 @@ def neuron_enumerated(w: np.ndarray, b: float) -> tuple[np.ndarray, np.ndarray]:
 
 def layer_to_graph(x_bits: np.ndarray, W: np.ndarray, b: np.ndarray,
                    mode: str = "auto", name: str = "layer",
-                   run_synth: bool = True) -> LogicGraph:
+                   optimize="default") -> LogicGraph:
     """Convert one binarized layer (all neurons, shared inputs) to a graph.
 
     mode: 'isf' | 'enum' | 'auto' (enum when fanin <= ENUM_LIMIT).
+    optimize: gate-level optimization of the factored graph —
+      ``"default"`` (the core/opt.py default pipeline), ``"none"`` (raw
+      espresso factoring), or a :class:`~repro.core.opt.PassManager`.
     """
     fanin, n_neurons = W.shape
     if mode == "auto":
@@ -170,8 +171,8 @@ def layer_to_graph(x_bits: np.ndarray, W: np.ndarray, b: np.ndarray,
         assert espresso.check_cover(cubes, x_on, x_off), \
             f"minimization broke neuron {j}"
         cube_sets.append(cubes)
-    graph = espresso.sop_to_graph(cube_sets, n_inputs=fanin, name=name)
-    return optimize(graph) if run_synth else graph
+    return espresso.sop_to_graph(cube_sets, n_inputs=fanin, name=name,
+                                 optimize=optimize)
 
 
 # ---------------------------------------------------------------------------

@@ -29,6 +29,7 @@ from dataclasses import dataclass
 import numpy as np
 
 from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, UNARY
+from repro.core.opt import resolve_pipeline
 from repro.core.scheduler import LogicProgram, compile_graph
 
 
@@ -93,16 +94,26 @@ def _extract(graph: LogicGraph, out_idx: list[int]) -> LogicGraph:
     return sub
 
 
-def partition(graph: LogicGraph, max_gates: int,
-              ) -> list[Partition]:
+def partition(graph: LogicGraph, max_gates: int, *,
+              optimize="none") -> list[Partition]:
     """Greedy cone-overlap clustering under a per-partition gate budget.
 
     Each cluster's gate set is the union of its members' cones; a new
     output joins the cluster where it adds the fewest NEW gates, if the
     union stays <= max_gates; otherwise it seeds a new cluster.
+
+    ``optimize`` (``"default"`` | ``"none"`` | a core/opt.py
+    ``PassManager``) runs the gate-level pass pipeline on each extracted
+    cluster cone: cross-cluster gate duplication re-exposes
+    constant/CSE/dead-fanin slack *inside* a cluster that global
+    optimization could not see, so per-cluster passes shrink the
+    per-program buffer budget the partitioning exists to bound. Budget
+    accounting stays on the raw cone sizes (optimization only shrinks a
+    cluster, never grows it).
     """
     if graph.n_outputs == 0:
         return []
+    pipeline = resolve_pipeline(optimize)
     cones = output_cones(graph)
     order = np.argsort([-len(c) for c in cones], kind="stable")
     clusters: list[tuple[set, list]] = []   # (gate union, output indices)
@@ -120,8 +131,13 @@ def partition(graph: LogicGraph, max_gates: int,
         else:
             clusters[best][0].update(cone)
             clusters[best][1].append(oi)
-    return [Partition(graph=_extract(graph, members), output_indices=members)
-            for _, members in clusters]
+    parts = []
+    for _, members in clusters:
+        sub = _extract(graph, members)
+        if pipeline is not None:
+            sub = pipeline.run(sub).graph
+        parts.append(Partition(graph=sub, output_indices=members))
+    return parts
 
 
 def compile_partitions(parts: list[Partition], n_unit: int,

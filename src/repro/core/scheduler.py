@@ -3,8 +3,10 @@
 Turns a levelized :class:`LogicGraph` into a :class:`LogicProgram` — the
 flat address/opcode streams that drive the time-shared compute units.
 
-Scheduling pipeline (DESIGN.md §1): levelize -> opcode-sort -> fuse ->
-address-alloc -> emit:
+Scheduling pipeline (DESIGN.md §1): [optimize ->] levelize -> opcode-sort
+-> fuse -> address-alloc -> emit (the optional first stage is the
+gate-level pass pipeline of core/opt.py, DESIGN.md §7, via the
+``optimize=`` knob of :func:`compile_graph`):
 
   * each logic level with ``n_l`` gates on a fabric with ``n_unit`` units is
     split into ``ceil(n_l / n_unit)`` *sub-kernel steps* (eq. 23);
@@ -51,6 +53,7 @@ import numpy as np
 from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, MIXED_DISPATCH,
                                 OpCode, apply_op)
 from repro.core.levelize import Levelization, levelize
+from repro.core.opt import resolve_pipeline as _resolve_pipeline
 from repro.core import packing
 
 
@@ -215,7 +218,8 @@ def compile_graph(graph: LogicGraph, n_unit: int,
                   alloc: str = "direct",
                   lv: Levelization | None = None, *,
                   opcode_sort: bool = True,
-                  fuse_levels: bool = True) -> LogicProgram:
+                  fuse_levels: bool = True,
+                  optimize="none") -> LogicProgram:
     """Schedule ``graph`` onto ``n_unit`` time-shared compute units.
 
     ``opcode_sort`` groups each level's gates by opcode so steps are
@@ -223,11 +227,23 @@ def compile_graph(graph: LogicGraph, n_unit: int,
     gates back-fill spare unit slots of earlier steps, shrinking
     ``n_steps`` below the eq. 23 count (see DESIGN.md §1). Both default on;
     disable ``fuse_levels`` to reproduce the paper-exact eq. 23 layout.
+
+    ``optimize`` runs a gate-level optimization pipeline (core/opt.py)
+    before levelization: ``"default"`` for :meth:`PassManager.default`,
+    ``"none"`` (the default: a hand-built graph schedules exactly as
+    written, preserving the paper-exact eq. 23 contract), or any
+    :class:`~repro.core.opt.PassManager`. The program's I/O interface is
+    unchanged — passes never touch primary inputs or output ordering —
+    but ``n_gates``/``n_steps``/``depth`` reflect the optimized graph.
     """
     if n_unit < 1:
         raise ValueError("n_unit must be >= 1")
     if alloc not in ("direct", "liveness"):
         raise ValueError(f"unknown alloc strategy {alloc!r}")
+    pipeline = _resolve_pipeline(optimize)
+    if pipeline is not None:
+        graph = pipeline.run(graph).graph
+        lv = None                      # levelization refers to the old graph
     lv = lv or levelize(graph)
     base = graph.first_gate_wire
 

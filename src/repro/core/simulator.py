@@ -18,8 +18,6 @@ from __future__ import annotations
 
 from dataclasses import dataclass
 
-import numpy as np
-
 from repro.core.cost_model import CostModel, FfclStats
 from repro.core.scheduler import LogicProgram
 

@@ -1,235 +1,51 @@
-"""Logic synthesis passes (ABC stand-in, paper §6.1).
+"""Logic synthesis passes (ABC stand-in, paper §6.1) — legacy facade.
 
 The paper runs ``resyn; resyn2; resyn2rs; compress2rs; st; map; dch; map``
-in ABC with two objectives: minimize total gate count and maximum logic depth
-(both appear directly in the cycle-count model, eq. 23). ABC is unavailable
-offline, so this module implements passes with the same objectives:
+in ABC with two objectives: minimize total gate count and maximum logic
+depth (both appear directly in the cycle-count model, eq. 23). ABC is
+unavailable offline; the rewrites live in **core/opt.py** as composable
+passes with wire remaps (DESIGN.md §7):
 
-  * constant folding        (0/1 absorption, annihilation)
-  * operand canonicalization + structural hashing (CSE)
-  * algebraic rewrites      (double-NOT, idempotence, involution, NOT-fusion
-                             into NAND/NOR/XNOR -- "technology mapping" onto
+  * constant folding        (:class:`~repro.core.opt.ConstantFold`)
+  * structural hashing/CSE  (:class:`~repro.core.opt.StructuralHash`)
+  * algebraic identities    (:class:`~repro.core.opt.SimplifyIdentities`:
+                             double-NOT, idempotence, NOT-fusion into
+                             NAND/NOR/XNOR — "technology mapping" onto
                              the full DSP opcode set)
-  * dead-gate elimination   (unreachable from outputs)
-  * associative tree rebalancing (depth reduction for AND/OR/XOR chains)
+  * dead-gate elimination   (:class:`~repro.core.opt.DeadGateElim`)
+  * associative rebalancing (:class:`~repro.core.opt.Rebalance`)
 
-``optimize(graph)`` runs them to a fixed point and is semantics-preserving:
-tests assert ``evaluate`` equality on random vectors and via hypothesis.
+This module keeps the original graph-in/graph-out names for callers that
+don't need remaps; new code should use :class:`repro.core.opt.PassManager`
+directly (or the ``optimize=`` knob on ``scheduler.compile_graph`` /
+``nullanet.layer_to_graph`` / the flow and serving layers).
+
+``optimize(graph)`` runs the default pipeline to a fixed point and is
+semantics-preserving: tests assert ``evaluate`` equality on random
+vectors and via hypothesis.
 """
 from __future__ import annotations
 
-import numpy as np
-
-from repro.core.gate_ir import (ASSOCIATIVE, COMMUTATIVE, CONST0, CONST1,
-                                LogicGraph, OpCode, UNARY)
-
-# (op, const_operand_value, const_on_right) -> ('const', v) | ('pass', ) |
-# ('not', )   -- what the gate reduces to when one operand is a constant.
-_CONST_RULES = {
-    (OpCode.AND, 0): ("const", 0), (OpCode.AND, 1): ("pass",),
-    (OpCode.OR, 0): ("pass",), (OpCode.OR, 1): ("const", 1),
-    (OpCode.XOR, 0): ("pass",), (OpCode.XOR, 1): ("not",),
-    (OpCode.NAND, 0): ("const", 1), (OpCode.NAND, 1): ("not",),
-    (OpCode.NOR, 0): ("not",), (OpCode.NOR, 1): ("const", 0),
-    (OpCode.XNOR, 0): ("not",), (OpCode.XNOR, 1): ("pass",),
-}
-
-# op applied to (x, x) -> result
-_IDEMPOTENT_RULES = {
-    OpCode.AND: ("pass",), OpCode.OR: ("pass",),
-    OpCode.XOR: ("const", 0), OpCode.XNOR: ("const", 1),
-    OpCode.NAND: ("not",), OpCode.NOR: ("not",),
-}
-
-_NEGATED = {OpCode.AND: OpCode.NAND, OpCode.NAND: OpCode.AND,
-            OpCode.OR: OpCode.NOR, OpCode.NOR: OpCode.OR,
-            OpCode.XOR: OpCode.XNOR, OpCode.XNOR: OpCode.XOR,
-            OpCode.NOT: OpCode.COPY, OpCode.COPY: OpCode.NOT}
-
-
-def _rewrite_pass(graph: LogicGraph) -> LogicGraph:
-    """One forward pass: const-fold + canonicalize + hash-cons + local rules.
-
-    Builds a new graph; ``repl[w]`` maps old wire -> new wire.
-    """
-    new = LogicGraph(graph.n_inputs, name=graph.name)
-    repl = np.zeros(graph.n_wires, dtype=np.int64)
-    repl[CONST0], repl[CONST1] = CONST0, CONST1
-    for i in range(graph.n_inputs):
-        repl[2 + i] = 2 + i
-    # hash-consing table over the *new* graph
-    table: dict[tuple[int, int, int], int] = {}
-    # definition of each new wire (for NOT-fusion lookups)
-    new_def: dict[int, tuple[int, int, int]] = {}
-
-    def emit(op: OpCode, a: int, b: int) -> int:
-        if op in COMMUTATIVE and a > b:
-            a, b = b, a
-        if op in UNARY:
-            b = CONST0
-        key = (int(op), a, b)
-        if key in table:
-            return table[key]
-        w = new.add_gate(op, a, b)
-        table[key] = w
-        new_def[w] = key
-        return w
-
-    def resolve(op: OpCode, a: int, b: int) -> int:
-        # --- constant folding ---
-        if op in UNARY:
-            if op == OpCode.COPY:
-                return a
-            if a == CONST0:
-                return CONST1
-            if a == CONST1:
-                return CONST0
-            # NOT(NOT(x)) = x ; NOT(g(x,y)) = negated-g(x,y) (NOT fusion)
-            if a in new_def:
-                dop, da, db = new_def[a]
-                dop = OpCode(dop)
-                if dop == OpCode.NOT:
-                    return da
-                if dop in _NEGATED:
-                    return resolve(_NEGATED[dop], da, db)
-            return emit(op, a, b)
-        # binary ops
-        for x, y in ((a, b), (b, a)):
-            if y in (CONST0, CONST1):
-                rule = _CONST_RULES.get((op, y))
-                if rule is None:
-                    continue
-                if rule[0] == "const":
-                    return CONST1 if rule[1] else CONST0
-                if rule[0] == "pass":
-                    return x
-                if rule[0] == "not":
-                    return resolve(OpCode.NOT, x, CONST0)
-        if a == b:
-            rule = _IDEMPOTENT_RULES.get(op)
-            if rule is not None:
-                if rule[0] == "const":
-                    return CONST1 if rule[1] else CONST0
-                if rule[0] == "pass":
-                    return a
-                if rule[0] == "not":
-                    return resolve(OpCode.NOT, a, CONST0)
-        return emit(op, a, b)
-
-    base = graph.first_gate_wire
-    for i, (op, a, b) in enumerate(graph.gates):
-        repl[base + i] = resolve(OpCode(op), int(repl[a]), int(repl[b]))
-    new.set_outputs(int(repl[o]) for o in graph.outputs)
-    return new
+from repro.core.gate_ir import LogicGraph
+from repro.core.opt import (DeadGateElim, PassManager,
+                            Rebalance as _Rebalance)
 
 
 def dead_gate_elim(graph: LogicGraph) -> LogicGraph:
     """Remove gates not reachable (backwards) from any output."""
-    live = np.zeros(graph.n_wires, dtype=bool)
-    live[[CONST0, CONST1]] = True
-    live[2:2 + graph.n_inputs] = True
-    stack = [o for o in graph.outputs]
-    seen = set()
-    while stack:
-        w = stack.pop()
-        if w in seen:
-            continue
-        seen.add(w)
-        live[w] = True
-        if graph.is_gate(w):
-            op, a, b = graph.gate_of_wire(w)
-            stack.append(a)
-            if OpCode(op) not in UNARY:
-                stack.append(b)
-    new = LogicGraph(graph.n_inputs, name=graph.name)
-    repl = np.full(graph.n_wires, -1, dtype=np.int64)
-    repl[:2 + graph.n_inputs] = np.arange(2 + graph.n_inputs)
-    base = graph.first_gate_wire
-    for i, (op, a, b) in enumerate(graph.gates):
-        w = base + i
-        if live[w]:
-            repl[w] = new.add_gate(OpCode(op), int(repl[a]), int(repl[b]))
-    new.set_outputs(int(repl[o]) for o in graph.outputs)
-    return new
-
-
-def _collect_chain(graph: LogicGraph, wire: int, op: OpCode, fanout: np.ndarray,
-                   leaves: list[int]) -> None:
-    """Collect leaves of a maximal single-fanout same-op tree rooted at wire."""
-    if graph.is_gate(wire):
-        gop, a, b = graph.gate_of_wire(wire)
-        if OpCode(gop) == op and fanout[wire] == 1:
-            _collect_chain(graph, a, op, fanout, leaves)
-            _collect_chain(graph, b, op, fanout, leaves)
-            return
-    leaves.append(wire)
+    return DeadGateElim().run(graph).graph
 
 
 def rebalance(graph: LogicGraph) -> LogicGraph:
     """Rebuild associative same-op chains as balanced trees (depth cut).
 
     A chain ``(((a&b)&c)&d)`` has depth 3; the balanced tree has depth 2.
-    Only single-fanout internal nodes are absorbed, so gate count never grows.
+    Only single-fanout internal nodes are absorbed, so gate count never
+    grows.
     """
-    fanout = graph.fanout_counts()
-    new = LogicGraph(graph.n_inputs, name=graph.name)
-    repl = np.full(graph.n_wires, -1, dtype=np.int64)
-    repl[:2 + graph.n_inputs] = np.arange(2 + graph.n_inputs)
-    base = graph.first_gate_wire
-    absorbed = np.zeros(graph.n_wires, dtype=bool)
-
-    # mark internal nodes that will be absorbed into a parent's balanced tree
-    for i, (op, a, b) in enumerate(graph.gates):
-        op = OpCode(op)
-        if op not in ASSOCIATIVE:
-            continue
-        for child in (a, b):
-            if graph.is_gate(child) and fanout[child] == 1:
-                cop, _, _ = graph.gate_of_wire(child)
-                if OpCode(cop) == op:
-                    absorbed[child] = True
-
-    def build_balanced(op: OpCode, leaves: list[int]) -> int:
-        nodes = [int(repl[w]) for w in leaves]
-        while len(nodes) > 1:
-            nxt = []
-            for j in range(0, len(nodes) - 1, 2):
-                nxt.append(new.add_gate(op, nodes[j], nodes[j + 1]))
-            if len(nodes) % 2:
-                nxt.append(nodes[-1])
-            nodes = nxt
-        return nodes[0]
-
-    for i, (op, a, b) in enumerate(graph.gates):
-        w = base + i
-        if absorbed[w]:
-            continue
-        op = OpCode(op)
-        if op in ASSOCIATIVE:
-            leaves: list[int] = []
-            _collect_chain(graph, a, op, fanout, leaves)
-            _collect_chain(graph, b, op, fanout, leaves)
-            if any(repl[x] < 0 for x in leaves):  # leaf was absorbed upstream
-                leaves = [a, b]
-            repl[w] = build_balanced(op, leaves)
-        else:
-            repl[w] = new.add_gate(op, int(repl[a]), int(repl[b]))
-    new.set_outputs(int(repl[o]) for o in graph.outputs)
-    return new
+    return _Rebalance().run(graph).graph
 
 
 def optimize(graph: LogicGraph, max_iters: int = 8) -> LogicGraph:
-    """Run all passes to a fixed point on (n_gates, depth)."""
-    from repro.core.levelize import levelize
-    cur = graph
-    prev_key = None
-    for _ in range(max_iters):
-        cur = _rewrite_pass(cur)
-        cur = dead_gate_elim(cur)
-        cur = rebalance(cur)
-        cur = dead_gate_elim(cur)
-        key = (cur.n_gates, levelize(cur).depth)
-        if key == prev_key:
-            break
-        prev_key = key
-    return cur
+    """Run the default pass pipeline to a fixed point on (n_gates, depth)."""
+    return PassManager.default(max_iters=max_iters).run(graph).graph

@@ -82,6 +82,7 @@ class LogicClassifier:
     b_out: np.ndarray
     n_unit: int
     alloc: str
+    optimize: object = "default"     # the core/opt.py knob the layers used
     _stacked: LogicGraph | None = field(default=None, repr=False)
     _runners: dict = field(default_factory=dict, repr=False)
     _engine: object = field(default=None, repr=False)
@@ -96,14 +97,14 @@ class LogicClassifier:
 
     @property
     def programs(self) -> list:
-        return [l.program for l in self.layers]
+        return [layer.program for layer in self.layers]
 
     @property
     def stacked_graph(self) -> LogicGraph:
         """The hidden stack composed into one graph (engine serving path)."""
         if self._stacked is None:
-            self._stacked = compose_graphs([l.graph for l in self.layers],
-                                           name="hidden-stack")
+            self._stacked = compose_graphs(
+                [layer.graph for layer in self.layers], name="hidden-stack")
         return self._stacked
 
     # -- execution ----------------------------------------------------------
@@ -114,7 +115,7 @@ class LogicClassifier:
         serving engine's runner (serve/logic_engine.py) but chains stages
         input->output instead of concatenating partition outputs."""
         if backend not in self._runners:
-            arrs = [program_arrays(l.program) for l in self.layers]
+            arrs = [program_arrays(layer.program) for layer in self.layers]
             kw = dict(interpret=True, use_ref=(backend == "reference"))
 
             def run(bits):
@@ -131,11 +132,14 @@ class LogicClassifier:
 
     def _serve_engine(self):
         """Default unpartitioned engine; callers wanting a partition budget
-        or shared cache pass their own engine to :meth:`hidden_bits`."""
+        or shared cache pass their own engine to :meth:`hidden_bits`. It
+        inherits the classifier's ``optimize`` setting so an
+        ``optimize="none"`` build really serves the raw netlist on the
+        engine backend too (the A/B contract)."""
         if self._engine is None:
             from repro.serve import LogicEngine
             self._engine = LogicEngine(n_unit=self.n_unit, alloc=self.alloc,
-                                       capacity=256)
+                                       capacity=256, optimize=self.optimize)
         return self._engine
 
     def hidden_bits(self, bits: np.ndarray, backend: str = "reference",
@@ -175,29 +179,33 @@ class LogicClassifier:
         return simulate_pipeline(self.programs, n_input_vectors)
 
     def layer_stats(self) -> list[dict]:
-        return [{**l.program.stats(),
-                 "n_inputs": l.n_inputs, "n_outputs": l.n_outputs}
-                for l in self.layers]
+        return [{**layer.program.stats(),
+                 "n_inputs": layer.n_inputs, "n_outputs": layer.n_outputs}
+                for layer in self.layers]
 
 
 def build_classifier(params: dict, n_layers: int, calib_x: np.ndarray,
                      *, mode: str = "auto", n_unit: int = 64,
-                     alloc: str = "liveness") -> LogicClassifier:
+                     alloc: str = "liveness",
+                     optimize="default") -> LogicClassifier:
     """Convert a trained binarized MLP's hidden stack (all layers).
 
     Calibration activations come from :func:`hard_forward` on the
     calibration set, so ISF care-sets are sampled from exactly the
-    function the logic must reproduce.
+    function the logic must reproduce. ``optimize`` is the per-layer
+    gate-level pass pipeline (core/opt.py; semantics-preserving, so
+    parity holds either way — ``"none"`` keeps raw synthesis output for
+    A/B benchmarking).
     """
     bits = input_bits(calib_x).astype(np.uint8)
     acts, _ = hard_forward(params, bits, n_layers)
     layers = tuple(
         convert_layer(params[f"w{i}"], params[f"b{i}"], acts[i],
                       n_unit=n_unit, mode=mode, alloc=alloc,
-                      name=f"layer{i}")
+                      name=f"layer{i}", optimize=optimize)
         for i in range(n_layers - 1))
     return LogicClassifier(
         layers=layers,
         w_out=np.asarray(params[f"w{n_layers - 1}"]),
         b_out=np.asarray(params[f"b{n_layers - 1}"]),
-        n_unit=n_unit, alloc=alloc)
+        n_unit=n_unit, alloc=alloc, optimize=optimize)

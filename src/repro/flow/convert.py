@@ -50,7 +50,8 @@ class CompiledLayer:
 
 
 def layer_graph(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
-                *, mode: str = "auto", name: str = "layer") -> LogicGraph:
+                *, mode: str = "auto", name: str = "layer",
+                optimize="default") -> LogicGraph:
     """Graph-only conversion of one binarized layer (no scheduling).
 
     Args:
@@ -61,22 +62,28 @@ def layer_graph(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
         care-set for ISF mode; unused by full enumeration.
       mode: 'isf' | 'enum' | 'auto' (enumeration when fanin <= ENUM_LIMIT;
         enumeration makes the conversion *exact*, see module docstring).
+      optimize: gate-level pass pipeline for the synthesized graph
+        (core/opt.py): ``"default"`` | ``"none"`` | a ``PassManager``.
+        Semantics-preserving, so the parity guarantees are unaffected.
     """
     W = np.asarray(W, dtype=np.float64)
     b = np.asarray(b, dtype=np.float64)
     return layer_to_graph(np.asarray(calib_bits, dtype=np.uint8), W, b,
-                          mode=mode, name=name)
+                          mode=mode, name=name, optimize=optimize)
 
 
 def convert_layer(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
                   *, n_unit: int, mode: str = "auto",
                   alloc: str = "liveness", name: str = "layer",
-                  opcode_sort: bool = True, fuse_levels: bool = True
-                  ) -> CompiledLayer:
+                  opcode_sort: bool = True, fuse_levels: bool = True,
+                  optimize="default") -> CompiledLayer:
     """NullaNet-convert one binarized layer (:func:`layer_graph`) and
     compile it (``n_unit``/``alloc``/``opcode_sort``/``fuse_levels`` are
-    the core/scheduler.py knobs)."""
-    graph = layer_graph(W, b, calib_bits, mode=mode, name=name)
+    the core/scheduler.py knobs; ``optimize`` the core/opt.py pipeline —
+    applied once, at the graph stage, so the retained ``graph`` and the
+    compiled ``program`` describe the same optimized netlist)."""
+    graph = layer_graph(W, b, calib_bits, mode=mode, name=name,
+                        optimize=optimize)
     program = compile_graph(graph, n_unit=n_unit, alloc=alloc,
                             opcode_sort=opcode_sort, fuse_levels=fuse_levels)
     return CompiledLayer(graph=graph, program=program)
@@ -84,8 +91,8 @@ def convert_layer(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
 
 def layer_to_program(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
                      *, n_unit: int, mode: str = "auto",
-                     alloc: str = "liveness", name: str = "layer"
-                     ) -> LogicProgram:
+                     alloc: str = "liveness", name: str = "layer",
+                     optimize="default") -> LogicProgram:
     """Program-only convenience over :func:`convert_layer`."""
     return convert_layer(W, b, calib_bits, n_unit=n_unit, mode=mode,
-                         alloc=alloc, name=name).program
+                         alloc=alloc, name=name, optimize=optimize).program

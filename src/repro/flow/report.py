@@ -53,6 +53,7 @@ class FlowConfig:
     n_unit: int = 32
     alloc: str = "liveness"
     mode: str = "auto"
+    optimize: str = "default"        # core/opt.py pipeline ("none" = raw)
     max_gates: int | None = None     # engine partition budget (None = mono)
     seed: int = 0
     backends: tuple[str, ...] = BACKENDS
@@ -112,12 +113,12 @@ class EndToEndReport:
             f"parity: {'EXACT' if self.parity else 'approx'}"
             f" | backends bit-identical: {self.bit_identical}"
             f" | mode: {'enum (exact)' if self.exact_mode else 'isf'}")
-        for l in self.layers:
+        for st in self.layers:
             lines.append(
-                f"  {l['name']}: {l['n_inputs']}->{l['n_outputs']} "
-                f"{l['n_gates']} gates depth {l['depth']} "
-                f"-> {l['n_steps']} steps @ {l['n_unit']} units "
-                f"(occ {l['occupancy']:.0%})")
+                f"  {st['name']}: {st['n_inputs']}->{st['n_outputs']} "
+                f"{st['n_gates']} gates depth {st['depth']} "
+                f"-> {st['n_steps']} steps @ {st['n_unit']} units "
+                f"(occ {st['occupancy']:.0%})")
         lines.append(
             f"simulated: {self.sim_cycles:.0f} cycles ({self.sim_bound}-"
             f"bound) for {self.n_val} input vectors; "
@@ -147,14 +148,16 @@ def run_flow(cfg: FlowConfig = FlowConfig(), log_every: int = 0
 
     t0 = time.perf_counter()
     clf = build_classifier(params_np, n_layers, xt, mode=cfg.mode,
-                           n_unit=cfg.n_unit, alloc=cfg.alloc)
+                           n_unit=cfg.n_unit, alloc=cfg.alloc,
+                           optimize=cfg.optimize)
     convert_s = time.perf_counter() - t0
 
     engine = None
     if "engine" in cfg.backends:
         from repro.serve import LogicEngine
         engine = LogicEngine(n_unit=cfg.n_unit, alloc=cfg.alloc,
-                             capacity=256, max_gates=cfg.max_gates)
+                             capacity=256, max_gates=cfg.max_gates,
+                             optimize=cfg.optimize)
 
     logic_acc: dict[str, float] = {}
     eval_s: dict[str, float] = {}

@@ -17,7 +17,6 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.core.gate_ir import MIXED_DISPATCH
 
 
 def apply_opcode_jnp(op: jnp.ndarray, a: jnp.ndarray,

@@ -28,7 +28,6 @@ import traceback
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.configs import (ARCH_IDS, SHAPES, cell_supported, get_config,
@@ -37,7 +36,7 @@ from repro.launch import roofline as rf
 from repro.launch.mesh import make_production_mesh
 from repro.models.pspec_utils import activation_sharding
 from repro.models.transformer import param_shapes
-from repro.optim import adamw_init
+from repro.optim import adamw_init, resolve_moment_dtype
 from repro.serve.engine import decode_step, init_decode_cache, prefill
 from repro.train import sharding as shd
 from repro.train.trainer import TrainConfig, make_train_step
@@ -80,7 +79,12 @@ def build_lowered(arch: str, shape: str, mesh, *, overrides=None,
         tc = TrainConfig(grad_accum=(train_accum if train_accum is not None
                                      else TRAIN_ACCUM.get(arch, 1)))
         step = make_train_step(cfg, tc)
-        opt_shapes = jax.eval_shape(adamw_init, pshapes)
+        # same moment dtype the real Trainer initializes with, so the
+        # reported optimizer-state footprint matches (bf16-moment configs)
+        init_opt = partial(adamw_init,
+                           moment_dtype=resolve_moment_dtype(
+                               cfg.moment_dtype))
+        opt_shapes = jax.eval_shape(init_opt, pshapes)
         mshard = shd.moment_shardings(cfg, mesh, pshapes)
         opt_shard = type(opt_shapes)(step=NamedSharding(mesh, P()),
                                      mu=mshard, nu=mshard)

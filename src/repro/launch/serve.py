@@ -13,7 +13,6 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ARCH_IDS, get_config
-from repro.launch.mesh import make_host_mesh
 from repro.models.transformer import init_params
 from repro.serve import Request, RequestBatcher, decode_step, prefill
 
@@ -32,7 +31,6 @@ def main() -> None:
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.is_encoder:
         raise SystemExit(f"{cfg.name} is encoder-only: no decode serving")
-    mesh = make_host_mesh()
     params = init_params(cfg, jax.random.PRNGKey(0))
     rng = np.random.default_rng(0)
 

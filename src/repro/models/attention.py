@@ -170,7 +170,6 @@ def prefill_cache(params: dict, x: jnp.ndarray, cfg, capacity: int, *,
                   ) -> tuple[jnp.ndarray, KVCache]:
     """Prefill: full attention + populate the cache (last `capacity` keys)."""
     b, s, _ = x.shape
-    hd = cfg.resolved_head_dim
     out = attention_forward(params, x, cfg, positions=positions,
                             causal=not cfg.is_encoder, window=window)
     q, k, v = _qkv(params, x, cfg)

@@ -1,8 +1,7 @@
 """Unified model configuration covering all assigned architecture families."""
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
-from typing import Any
+from dataclasses import dataclass, replace
 
 
 @dataclass(frozen=True)

@@ -44,17 +44,18 @@ def binary_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
 
 
 def ffn_to_program(p: dict, calib_bits: np.ndarray, n_unit: int = 64,
-                   mode: str = "isf", name: str = "ffn"
-                   ) -> LogicProgram:
+                   mode: str = "isf", name: str = "ffn",
+                   optimize="default") -> LogicProgram:
     """NullaNet conversion of the xb -> h map of one FFN layer.
 
     Thin wrapper over :func:`repro.flow.convert.layer_to_program` — the
-    single conversion code path of the repo.
+    single conversion code path of the repo (``optimize`` is its
+    core/opt.py pass-pipeline knob).
     """
     return layer_to_program(p["w_in"], p["b_in"],
                             np.asarray(calib_bits, dtype=np.uint8),
                             n_unit=n_unit, mode=mode, alloc="liveness",
-                            name=name)
+                            name=name, optimize=optimize)
 
 
 def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray

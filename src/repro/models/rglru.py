@@ -42,8 +42,8 @@ def rglru_scan(params, x: jnp.ndarray, c: float = 8.0,
 
     # h_t = a_t h_{t-1} + g_t: associative over pairs (a, g):
     #   (a2, g2) o (a1, g1) = (a1*a2, a2*g1 + g2)
-    def combine(l, rgt):
-        a_l, g_l = l
+    def combine(lft, rgt):
+        a_l, g_l = lft
         a_r, g_r = rgt
         return a_l * a_r, a_r * g_l + g_r
 

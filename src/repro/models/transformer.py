@@ -16,15 +16,13 @@ over its 26 heterogeneous layers.
 """
 from __future__ import annotations
 
-import functools
-from typing import Any, NamedTuple
+from typing import Any
 
 import jax
 import jax.numpy as jnp
 
 from repro.models import attention as attn
 from repro.models import mamba2, moe, rglru
-from repro.models.attention import KVCache
 from repro.models.config import ModelConfig
 from repro.models.layers import (gelu_mlp, normal_init, ones_init, rms_norm,
                                  softmax_xent, swiglu, zeros_init)
@@ -201,7 +199,6 @@ _INITS = {"normal": normal_init, "zeros": zeros_init, "ones": ones_init}
 
 def init_params(cfg: ModelConfig, key) -> dict:
     dt = _dtype(cfg)
-    leaves = []
 
     def build(spec, path=()):
         if isinstance(spec, dict):

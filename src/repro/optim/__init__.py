@@ -1,4 +1,5 @@
-from repro.optim.adamw import AdamWState, adamw_init, adamw_update
+from repro.optim.adamw import (AdamWState, adamw_init, adamw_update,
+                               resolve_moment_dtype)
 from repro.optim.schedule import wsd_schedule, cosine_schedule, linear_warmup
 from repro.optim.clip import clip_by_global_norm
 from repro.optim.compression import (compress_int8, decompress_int8,
@@ -6,7 +7,7 @@ from repro.optim.compression import (compress_int8, decompress_int8,
                                      ef_decompress_apply)
 
 __all__ = [
-    "AdamWState", "adamw_init", "adamw_update",
+    "AdamWState", "adamw_init", "adamw_update", "resolve_moment_dtype",
     "wsd_schedule", "cosine_schedule", "linear_warmup",
     "clip_by_global_norm",
     "compress_int8", "decompress_int8", "ErrorFeedbackState", "ef_init",

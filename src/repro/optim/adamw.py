@@ -18,6 +18,22 @@ class AdamWState(NamedTuple):
     nu: Any               # pytree like params
 
 
+_MOMENT_DTYPES = {"float32": jnp.float32, "bfloat16": jnp.bfloat16}
+
+
+def resolve_moment_dtype(name: str):
+    """Config-string -> jnp dtype for the moment buffers (the one place
+    the supported set lives; Trainer and the launch dry-run both resolve
+    ``cfg.moment_dtype`` through here so their optimizer-state footprints
+    agree)."""
+    try:
+        return _MOMENT_DTYPES[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown moment_dtype {name!r}; "
+            f"use one of {sorted(_MOMENT_DTYPES)}") from None
+
+
 def adamw_init(params: Any, moment_dtype=jnp.float32) -> AdamWState:
     zeros = lambda p: jnp.zeros(p.shape, dtype=moment_dtype)
     return AdamWState(

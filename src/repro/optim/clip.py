@@ -7,8 +7,8 @@ import jax.numpy as jnp
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree.leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32)))
-                        for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32)))
+                        for leaf in leaves))
 
 
 def clip_by_global_norm(grads, max_norm: float):

@@ -16,7 +16,6 @@ with their neighbours instead of padding to private word boundaries.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable
 
 import numpy as np
 

@@ -177,7 +177,7 @@ def decode_step(params, cfg: ModelConfig, tokens: jnp.ndarray,
                                length=cache.length + 1)
     else:
         # heterogeneous (hybrid): python loop with per-kind counters
-        ia = isym = irec = 0
+        ia = irec = 0
         new_k, new_v = [], []
         new_h, new_rc = [], []
         for lp, kind in zip(iter_layer_params(params, cfg), kinds):

@@ -48,6 +48,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
 from repro.core.gate_ir import LogicGraph
+from repro.core.opt import PassManager, resolve_pipeline
 from repro.core.packing import WORD_BITS
 from repro.core.partition import (compile_partitions, output_permutation,
                                   partition)
@@ -86,17 +87,30 @@ class CompiledEntry:
 class ProgramCache:
     """LRU registry of compiled logic programs.
 
-    Keying contract (documented in DESIGN.md §5): the key is
-    ``(LogicGraph.fingerprint(), n_unit, alloc, max_gates)`` —
+    Keying contract (documented in DESIGN.md §5/§7): the key is
+    ``(fingerprint, n_unit, alloc, max_gates)`` where the fingerprint is
+    taken **after** gate-level optimization when a pass pipeline is in
+    play —
 
       * ``fingerprint()`` hashes inputs/gates/outputs but NOT the name, so
         structurally identical graphs from different producers share one
         compiled program;
+      * with a ``pipeline`` (core/opt.py), the key uses the
+        *post-optimization* fingerprint: two raw graphs that rewrite to
+        the same optimized netlist — e.g. the same NullaNet layer
+        synthesized by two workers with different dead fanin — hit ONE
+        cache entry instead of compiling twice;
       * ``n_unit``/``alloc`` change the emitted streams and the buffer
         layout, so each fabric configuration caches separately;
       * ``max_gates`` (the partition budget, None = monolithic) changes the
         program *pipeline*, so partitioned and monolithic compilations of
         the same graph coexist.
+
+    Optimization itself is memoized per ``(raw fingerprint,
+    pipeline.cache_key)``, so the serving hot path stays O(1) per repeat
+    request: the raw fingerprint is memoized on the graph object, the
+    optimized graph on the cache — the pass pipeline runs once per
+    distinct raw structure, not once per request.
 
     Device arrays ride along for free: ``program_arrays`` memoizes on the
     (immutable) program object, and each engine attaches its fused jit
@@ -109,8 +123,35 @@ class ProgramCache:
     def __init__(self, max_entries: int | None = None):
         self.max_entries = max_entries
         self._entries: OrderedDict[tuple, CompiledEntry] = OrderedDict()
+        # (raw fingerprint, pipeline.cache_key) -> optimized LogicGraph;
+        # LRU-bounded looser than the entries (graphs are cheap next to
+        # compiled programs + device arrays, and a memo hit is what keeps
+        # re-admitted evictees from re-running the pass pipeline).
+        self._opt_memo: OrderedDict[tuple, LogicGraph] = OrderedDict()
         self.hits = 0
         self.misses = 0
+
+    @property
+    def _opt_memo_bound(self) -> int | None:
+        return None if self.max_entries is None else 8 * self.max_entries
+
+    def _optimized(self, graph: LogicGraph,
+                   pipeline: PassManager | None) -> LogicGraph:
+        """The graph the registry compiles and keys on (memoized)."""
+        if pipeline is None:
+            return graph
+        memo_key = (graph.fingerprint(), pipeline.cache_key)
+        cached = self._opt_memo.get(memo_key)
+        if cached is not None:
+            self._opt_memo.move_to_end(memo_key)
+            return cached
+        opt = pipeline.run(graph).graph
+        self._opt_memo[memo_key] = opt
+        bound = self._opt_memo_bound
+        if bound is not None:
+            while len(self._opt_memo) > bound:
+                self._opt_memo.popitem(last=False)
+        return opt
 
     def __len__(self) -> int:
         return len(self._entries)
@@ -121,6 +162,9 @@ class ProgramCache:
     @staticmethod
     def key_of(graph: LogicGraph, n_unit: int, alloc: str,
                max_gates: int | None) -> tuple:
+        """Registry key for ``graph`` — pass the graph the registry will
+        actually compile (i.e. the *post-optimization* graph when a
+        pipeline is in play; :meth:`get` handles that internally)."""
         # a budget the graph fits under compiles the identical monolithic
         # program as no budget at all — normalize so engines with different
         # (unbinding) budgets share one entry instead of duplicating it
@@ -133,8 +177,17 @@ class ProgramCache:
         return self._entries.get(key)
 
     def get(self, graph: LogicGraph, n_unit: int, alloc: str = "liveness",
-            max_gates: int | None = None) -> CompiledEntry:
-        """Return (compiling on miss) the program pipeline for ``graph``."""
+            max_gates: int | None = None,
+            pipeline: PassManager | None = None) -> CompiledEntry:
+        """Return (compiling on miss) the program pipeline for ``graph``.
+
+        With a ``pipeline`` the graph is optimized first (memoized) and
+        the entry is keyed on the optimized structure; budget
+        normalization and partitioning then see post-optimization gate
+        counts — a graph whose optimized form fits ``max_gates`` serves
+        monolithically even when its raw form would have split.
+        """
+        graph = self._optimized(graph, pipeline)
         key = self.key_of(graph, n_unit, alloc, max_gates)
         entry = self._entries.get(key)
         if entry is not None:
@@ -144,7 +197,10 @@ class ProgramCache:
         self.misses += 1
         t0 = time.perf_counter()
         if max_gates is not None and graph.n_gates > max_gates:
-            parts = partition(graph, max_gates=max_gates)
+            # per-cluster re-optimization: extraction re-exposes slack
+            # inside duplicated cones that global passes could not see
+            parts = partition(graph, max_gates=max_gates,
+                              optimize=pipeline)
             programs = tuple(compile_partitions(parts, n_unit, alloc=alloc))
             perm = output_permutation(parts, graph.n_outputs)
         else:
@@ -241,10 +297,16 @@ class LogicEngine:
                  shard: bool | None = None, cache: ProgramCache | None = None,
                  max_programs: int | None = None,
                  max_retained: int | None = None, use_ref: bool = False,
-                 interpret: bool = True, block_w: int = _k.LANE):
+                 interpret: bool = True, block_w: int = _k.LANE,
+                 optimize="default"):
         self.n_unit = n_unit
         self.alloc = alloc
         self.max_gates = max_gates
+        # gate-level pass pipeline (core/opt.py): submitted graphs are
+        # optimized (memoized per raw fingerprint) and the program cache
+        # keys on the POST-optimization fingerprint, so structurally
+        # equal requests share one compiled entry. "none" serves raw.
+        self.pipeline = resolve_pipeline(optimize)
         self.use_ref = use_ref
         self.interpret = interpret
         self.block_w = block_w
@@ -291,7 +353,8 @@ class LogicEngine:
     # -- program / runner plumbing ------------------------------------------
 
     def _entry(self, graph: LogicGraph) -> CompiledEntry:
-        entry = self.cache.get(graph, self.n_unit, self.alloc, self.max_gates)
+        entry = self.cache.get(graph, self.n_unit, self.alloc,
+                               self.max_gates, pipeline=self.pipeline)
         if self._exec_key not in entry.runners:
             entry.runners[self._exec_key] = self._build_runner(entry)
         return entry

@@ -70,7 +70,6 @@ def _shard_if(mesh: Mesh, dim: int, axis: str | None):
 
 
 def leaf_pspec(mesh: Mesh, name: str, shape: tuple, stacked: bool) -> P:
-    ndim = len(shape)
     body_shape = shape[1:] if stacked else shape
     rule = _RULES.get(name)
     if rule is not None and len(rule) != len(body_shape) and name in _MOE_3D:

@@ -19,18 +19,18 @@ from __future__ import annotations
 import time
 from dataclasses import dataclass
 from functools import partial
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from repro.data.synthetic import TokenPipeline
 from repro.models.config import ModelConfig
 from repro.models.transformer import init_params, param_shapes, train_loss
 from repro.optim import (adamw_init, adamw_update, clip_by_global_norm,
-                         wsd_schedule, cosine_schedule)
+                         cosine_schedule, resolve_moment_dtype,
+                         wsd_schedule)
 from repro.optim.compression import compress_int8, decompress_int8
 from repro.train import sharding as shd
 from repro.train.checkpoint import CheckpointManager
@@ -72,8 +72,7 @@ def make_train_step(cfg: ModelConfig, tc: TrainConfig) -> Callable:
     the standard memory-for-throughput trade at large global batch.
     """
     lr_fn = make_lr_fn(tc)
-    moment_dtype = {"float32": jnp.float32,
-                    "bfloat16": jnp.bfloat16}[cfg.moment_dtype]
+    resolve_moment_dtype(cfg.moment_dtype)   # validate early
 
     def loss_fn(params, batch):
         return train_loss(params, cfg, batch)
@@ -141,7 +140,11 @@ class Trainer:
         shapes = param_shapes(cfg)
         self.param_shardings = shd.param_shardings(cfg, mesh, shapes)
         moment_shardings = shd.moment_shardings(cfg, mesh, shapes)
-        opt_shapes = jax.eval_shape(adamw_init, shapes)
+        # honour cfg.moment_dtype (e.g. grok1's bf16 moments: fp32 would
+        # not fit HBM) — adamw_init defaults to fp32 otherwise
+        self._init_opt = partial(
+            adamw_init, moment_dtype=resolve_moment_dtype(cfg.moment_dtype))
+        opt_shapes = jax.eval_shape(self._init_opt, shapes)
         self.opt_shardings = type(opt_shapes)(
             step=NamedSharding(mesh, P()),
             mu=moment_shardings, nu=moment_shardings)
@@ -164,7 +167,7 @@ class Trainer:
                 out_shardings=self.param_shardings)(jax.random.PRNGKey(
                     self.tc.seed))
             opt = jax.jit(
-                adamw_init, out_shardings=self.opt_shardings)(params)
+                self._init_opt, out_shardings=self.opt_shardings)(params)
         return params, opt
 
     def maybe_resume(self, params, opt):

@@ -136,6 +136,62 @@ def test_real_nop_gates(rng):
 
 
 # ---------------------------------------------------------------------------
+# optimized vs unoptimized: the pass pipeline (core/opt.py) must keep all
+# five backends bit-identical, and the optimized graph must compute the
+# raw graph's function exactly
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed,n_inputs,n_gates,n_outputs,unary_frac",
+                         [(0, 8, 200, 8, 0.1),
+                          (1, 4, 30, 4, 0.3),
+                          (5, 6, 150, 6, 0.5),     # unary-rich: NOT fusion
+                          (6, 10, 400, 12, 0.05)])
+def test_optimized_graph_conformance(seed, n_inputs, n_gates, n_outputs,
+                                     unary_frac):
+    from repro.core.opt import PassManager
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_inputs, n_gates, n_outputs,
+                     unary_frac=unary_frac, locality=32)
+    bits = _bits(rng, 45, n_inputs)
+    go = PassManager.default().run(g).graph
+    assert (go.evaluate(bits) == g.evaluate(bits)).all()
+    assert go.n_gates <= g.n_gates
+    assert_conformance(go, bits)
+
+
+def test_compile_optimize_knob_conformance(rng):
+    """``compile_graph(optimize='default')`` programs agree with the RAW
+    graph's evaluate through the numpy / jnp / Pallas executors."""
+    g = random_graph(rng, 8, 250, 8, locality=32)
+    bits = _bits(rng, 45, 8)
+    want = g.evaluate(bits)
+    for n_unit in N_UNITS:
+        for alloc in ALLOCS:
+            prog = compile_graph(g, n_unit=n_unit, alloc=alloc,
+                                 optimize="default")
+            assert (execute_program_np(prog, bits) == want).all()
+            assert (logic_infer_bits(prog, bits, use_ref=True) == want).all()
+            assert (logic_infer_bits(prog, bits, use_ref=False) == want).all()
+
+
+def test_optimized_degenerate_graphs_conform(rng):
+    """Degenerate shapes stay servable after optimization: real NOP gates
+    fold to CONST0 outputs, duplicated/constant/pass-through outputs keep
+    their positions."""
+    from repro.core.opt import PassManager
+    pm = PassManager.default()
+    g = LogicGraph(2, name="nop")
+    nop = g.add_gate(OpCode.NOP, g.input_wire(0), g.input_wire(1))
+    g.set_outputs([nop, g.add_gate(OpCode.OR, nop, g.input_wire(1)),
+                   CONST1, g.input_wire(0), nop])
+    go = pm.run(g).graph
+    assert go.n_gates == 0                   # NOP folds, OR(0, b) passes b
+    assert go.outputs == [CONST0, g.input_wire(1), CONST1,
+                          g.input_wire(0), CONST0]
+    assert_conformance(go, _bits(rng, 37, 2))
+
+
+# ---------------------------------------------------------------------------
 # espresso / NullaNet degenerate covers (regression suite)
 # ---------------------------------------------------------------------------
 
@@ -236,6 +292,18 @@ if HAVE_HYPOTHESIS:
     def test_property_conformance(case, n_unit, alloc):
         g, bits = case
         assert_conformance(g, bits, n_units=(n_unit,), allocs=(alloc,))
+
+    @settings(max_examples=25, deadline=None)
+    @given(graph_cases(), st.sampled_from(N_UNITS))
+    def test_property_optimized_conformance(case, n_unit):
+        """The pass pipeline preserves every backend's semantics on the
+        same randomized structure/degenerate-output space."""
+        from repro.core.opt import PassManager
+        g, bits = case
+        go = PassManager.default().run(g).graph
+        assert (go.evaluate(bits) == g.evaluate(bits)).all()
+        assert_conformance(go, bits, n_units=(n_unit,),
+                           allocs=("liveness",))
 
     @settings(max_examples=15, deadline=None)
     @given(st.integers(0, 10 ** 6), st.integers(1, 6), st.integers(1, 5))

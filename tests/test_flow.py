@@ -6,6 +6,8 @@ layer k+1's packed input slab — must equal per-layer execution with an
 unpack -> repack round-trip between layers, bit for bit, including sample
 counts that do not fill the last 32-bit word.
 """
+import dataclasses
+
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -170,6 +172,50 @@ def test_classifier_three_backends_bit_identical(rng):
     assert (clf.predict(x) == np.argmax(logits, -1)).all()
 
 
+def test_classifier_optimize_on_off_parity(rng):
+    """Accuracy parity is preserved by the gate-level pass pipeline: the
+    optimized classifier predicts identically to the raw-synthesis one
+    (and to hard_forward) while strictly shrinking gates and steps."""
+    params = {
+        "w0": rng.normal(size=(7, 5)).astype(np.float32),
+        "b0": rng.normal(size=5).astype(np.float32),
+        "w1": rng.normal(size=(5, 4)).astype(np.float32),
+        "b1": rng.normal(size=4).astype(np.float32),
+        "w2": rng.normal(size=(4, 3)).astype(np.float32),
+        "b2": np.zeros(3, np.float32),
+    }
+    x = rng.integers(0, 2, (64, 7)).astype(np.uint8)
+    raw = build_classifier(params, 3, x, n_unit=8, optimize="none")
+    opt = build_classifier(params, 3, x, n_unit=8)     # default pipeline
+    bits = input_bits(x)
+    acts, _ = hard_forward(params, bits, 3)
+    for backend in ("reference", "pallas", "engine"):
+        h_raw = raw.hidden_bits(bits, backend=backend)
+        h_opt = opt.hidden_bits(bits, backend=backend)
+        assert (h_raw == acts[-1].astype(bool)).all(), backend
+        assert (h_opt == acts[-1].astype(bool)).all(), backend
+    # the default pipeline strictly reduces scheduled work vs raw synthesis
+    assert sum(c.program.n_gates for c in opt.layers) < \
+        sum(c.program.n_gates for c in raw.layers)
+    assert sum(c.program.n_steps for c in opt.layers) < \
+        sum(c.program.n_steps for c in raw.layers)
+
+
+@pytest.mark.slow
+def test_run_flow_optimize_none_matches_default():
+    """flow.e2e accuracy parity holds with optimization on AND off, and
+    both configurations report identical accuracies (semantics equal)."""
+    cfg = FlowConfig(n_features=6, hidden=(5,), n_classes=3,
+                     n_samples=400, train_steps=40, n_unit=8)
+    assert cfg.optimize == "default"
+    report, _ = run_flow(cfg)
+    report_raw, _ = run_flow(dataclasses.replace(cfg, optimize="none"))
+    assert report.parity and report.bit_identical
+    assert report_raw.parity and report_raw.bit_identical
+    assert report.logic_acc == report_raw.logic_acc
+    assert report.n_gates <= report_raw.n_gates
+
+
 def test_classifier_engine_partitioned_matches(rng):
     """Engine serving with a partition budget (pipelined multi-program
     sequence over the composed stack) stays bit-identical."""
@@ -188,8 +234,11 @@ def test_classifier_engine_partitioned_matches(rng):
     eng = LogicEngine(n_unit=8, capacity=64, max_gates=budget)
     got = clf.hidden_bits(bits, backend="engine", engine=eng)
     assert (got == ref).all()
-    entry = eng.cache.get(clf.stacked_graph, 8, "liveness", budget)
+    # the entry the engine served, keyed on the post-optimization form
+    entry = eng.cache.get(clf.stacked_graph, 8, "liveness", budget,
+                          pipeline=eng.pipeline)
     assert len(entry.programs) > 1     # the budget actually partitioned
+    assert eng.cache.misses == 1       # no phantom raw compile
 
 
 def test_ffn_to_program_wrapper_matches_flow(rng):
@@ -222,7 +271,7 @@ def test_run_flow_exact_parity():
     assert all(acc == report.binarized_acc
                for acc in report.logic_acc.values())
     assert len(report.layers) == 2
-    assert report.n_gates == sum(l.program.n_gates for l in clf.layers)
+    assert report.n_gates == sum(c.program.n_gates for c in clf.layers)
     assert report.sim_cycles > 0
     d = report.to_dict()
     assert d["parity"] and d["logic_acc"]["pallas"] == report.binarized_acc

@@ -10,7 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import packing
 from repro.core.gate_ir import random_graph
 from repro.core.scheduler import compile_graph, execute_program_np
-from repro.kernels.logic_dsp import (logic_forward, logic_infer_bits,
+from repro.kernels.logic_dsp import (logic_infer_bits,
                                      pack_bits_jnp, unpack_bits_jnp)
 from repro.kernels.xnor_gemm import pack_pm1, xnor_gemm, xnor_gemm_ref
 

@@ -8,7 +8,7 @@ import pytest
 
 from repro.configs import ARCH_IDS, get_config
 from repro.models import moe
-from repro.models.mamba2 import ssd_chunked, ssd_decode_step, ssd_reference
+from repro.models.mamba2 import ssd_chunked, ssd_reference
 from repro.models.rglru import rglru_reference, rglru_scan, rglru_step
 from repro.models.transformer import forward, init_params, train_loss
 
@@ -149,8 +149,9 @@ def test_rglru_scan_vs_reference(rng):
     h_ref = rglru_reference(params, x)
     np.testing.assert_allclose(np.asarray(h), np.asarray(h_ref),
                                rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(h_last), np.asarray(h_ref[:, -1]),
+                               rtol=1e-5, atol=1e-5)
     # decode continuation
-    hh = h_last * 0 + np.asarray(h_ref[:, 9])
     hstep = rglru_step(params, x[:, 10], jnp.asarray(np.asarray(h_ref[:, 9])))
     np.testing.assert_allclose(np.asarray(hstep), np.asarray(h_ref[:, 10]),
                                rtol=1e-5, atol=1e-5)

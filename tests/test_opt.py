@@ -1,0 +1,478 @@
+"""Pass-based optimization pipeline (core/opt.py): semantics, remaps,
+and the staged wiring through compile / partition / serving / cost model.
+
+Equivalence methodology: for small graphs (n_inputs <= 10) every pass is
+checked under FULL input enumeration — the strongest possible statement —
+and under random vectors for larger fanins; a hypothesis section widens
+the random-structure coverage when hypothesis is installed.
+"""
+import numpy as np
+import pytest
+
+from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, OpCode,
+                                random_graph, remap_wires)
+from repro.core.levelize import levelize
+from repro.core.opt import (ConstantFold, DeadGateElim, OptResult,
+                            PassManager, Rebalance, SimplifyIdentities,
+                            StructuralHash, compose_remaps, resolve_pipeline)
+from repro.core.scheduler import compile_graph, execute_program_np
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+ALL_PASSES = [ConstantFold(), SimplifyIdentities(), StructuralHash(),
+              DeadGateElim(), Rebalance()]
+
+
+def _vectors(g: LogicGraph, seed: int = 0) -> np.ndarray:
+    """Full enumeration for small fanin, random vectors otherwise."""
+    if g.n_inputs <= 10:
+        n = 2 ** g.n_inputs
+        return ((np.arange(n)[:, None] >> np.arange(g.n_inputs)[None, :])
+                & 1).astype(bool)
+    rng = np.random.default_rng(seed)
+    return rng.integers(0, 2, (256, g.n_inputs)).astype(bool)
+
+
+def _all_wire_values(g: LogicGraph, X: np.ndarray) -> np.ndarray:
+    """(n_wires, batch) value table — the oracle for the remap contract."""
+    probe = g.copy()
+    probe.set_outputs(range(probe.n_wires))
+    return probe.evaluate(X).T
+
+
+def assert_remap_contract(g: LogicGraph, res, X: np.ndarray) -> None:
+    """The full PassResult/OptResult contract of the opt module docstring:
+    outputs remap in order, and EVERY live old wire's function is computed
+    bit-for-bit by its image in the new graph."""
+    new, remap = res.graph, res.remap
+    assert len(remap) == g.n_wires
+    assert new.n_inputs == g.n_inputs
+    # constants + primary inputs are fixed points
+    assert (remap[:g.first_gate_wire] ==
+            np.arange(g.first_gate_wire)).all()
+    # output lists remap in order
+    assert remap_wires(remap, g.outputs, new.n_wires) == list(new.outputs)
+    old_vals = _all_wire_values(g, X)
+    new_vals = _all_wire_values(new, X)
+    live = np.flatnonzero(remap >= 0)
+    assert (old_vals[live] == new_vals[remap[live]]).all(), \
+        "a live wire's image computes a different function"
+
+
+# ---------------------------------------------------------------------------
+# per-pass equivalence on random + constructed graphs
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("opt_pass", ALL_PASSES, ids=lambda p: p.name)
+@pytest.mark.parametrize("seed,n_inputs,n_gates", [
+    (0, 6, 120), (1, 8, 300), (2, 4, 40), (3, 12, 200)])
+def test_pass_preserves_semantics_and_remap(opt_pass, seed, n_inputs,
+                                            n_gates):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, n_inputs, n_gates, 8, unary_frac=0.25, locality=24)
+    X = _vectors(g, seed)
+    want = g.evaluate(X)
+    res = opt_pass.run(g)
+    assert (res.graph.evaluate(X) == want).all()
+    assert res.graph.n_gates <= g.n_gates
+    assert_remap_contract(g, res, X)
+
+
+def test_constant_fold_absorbs_every_opcode():
+    """Each (op, const) rule fires: the folded graph has no const-fed
+    binary gates left, NOPs fold to CONST0, and semantics hold under
+    full enumeration."""
+    g = LogicGraph(2)
+    a, b = g.input_wire(0), g.input_wire(1)
+    outs = []
+    for op in (OpCode.AND, OpCode.OR, OpCode.XOR, OpCode.NAND, OpCode.NOR,
+               OpCode.XNOR):
+        outs.append(g.add_gate(op, a, CONST0))
+        outs.append(g.add_gate(op, CONST1, b))
+    outs.append(g.add_gate(OpCode.NOP, a, b))       # wire is identically 0
+    outs.append(g.add_gate(OpCode.NOT, CONST0))
+    outs.append(g.add_gate(OpCode.COPY, a))
+    g.set_outputs(outs)
+    res = ConstantFold().run(g)
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+    for op, x, y in res.graph.gates:
+        if OpCode(op) not in (OpCode.NOT, OpCode.COPY):
+            assert CONST0 not in (x, y) and CONST1 not in (x, y)
+    # 12 const-fed binaries + NOP + NOT(0) + COPY -> at most the 2 NOTs
+    # the 'not' rules need (deduped per operand)
+    assert res.graph.n_gates <= 2
+
+
+def test_constant_fold_cascades():
+    """A constant produced by folding propagates to downstream gates."""
+    g = LogicGraph(2)
+    a, b = g.input_wire(0), g.input_wire(1)
+    zero = g.add_gate(OpCode.AND, a, CONST0)       # == 0
+    dead = g.add_gate(OpCode.OR, zero, b)          # == b
+    out = g.add_gate(OpCode.XOR, dead, zero)       # == b
+    g.set_outputs([out])
+    res = ConstantFold().run(g)
+    assert res.graph.n_gates == 0
+    assert res.graph.outputs == [g.input_wire(1)]
+    assert res.remap[out] == g.input_wire(1)
+
+
+def test_structural_hash_dedupes_commutative():
+    g = LogicGraph(2)
+    a, b = g.input_wire(0), g.input_wire(1)
+    w1 = g.add_gate(OpCode.AND, a, b)
+    w2 = g.add_gate(OpCode.AND, b, a)              # commuted duplicate
+    w3 = g.add_gate(OpCode.AND, a, b)              # literal duplicate
+    out = g.add_gate(OpCode.OR, w1, w2)
+    g.set_outputs([out, w3])
+    res = StructuralHash().run(g)
+    assert res.remap[w1] == res.remap[w2] == res.remap[w3]
+    # OR(x, x) is left for SimplifyIdentities; dedup itself: 3 ANDs -> 1
+    assert res.graph.n_gates == 2
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+
+
+def test_simplify_double_negation_and_fusion():
+    g = LogicGraph(2)
+    a, b = g.input_wire(0), g.input_wire(1)
+    n1 = g.add_gate(OpCode.NOT, a)
+    n2 = g.add_gate(OpCode.NOT, n1)                # == a
+    land = g.add_gate(OpCode.AND, n2, b)
+    nand = g.add_gate(OpCode.NOT, land)            # fuses -> NAND(a, b)
+    same = g.add_gate(OpCode.XOR, b, b)            # == 0
+    g.set_outputs([nand, same])
+    res = SimplifyIdentities().run(g)
+    pipe = PassManager([SimplifyIdentities(), DeadGateElim()]).run(g)
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+    assert res.remap[n2] == g.input_wire(0)
+    assert res.remap[same] == CONST0
+    # after sweeping the unreferenced AND: a single NAND remains
+    assert pipe.graph.n_gates == 1
+    assert OpCode(pipe.graph.gates[0][0]) == OpCode.NAND
+
+
+def test_dead_gate_elim_drops_and_remaps_to_minus_one():
+    g = LogicGraph(4)
+    live = g.add_gate(OpCode.AND, g.input_wire(0), g.input_wire(1))
+    dead = [g.add_gate(OpCode.OR, g.input_wire(2), g.input_wire(3))
+            for _ in range(15)]
+    g.set_outputs([live])
+    res = DeadGateElim().run(g)
+    assert res.graph.n_gates == 1
+    assert (res.remap[np.asarray(dead)] == -1).all()
+    with pytest.raises(ValueError, match="dropped"):
+        remap_wires(res.remap, [dead[0]], res.graph.n_wires)
+
+
+def test_dead_gate_elim_unary_with_dead_ignored_operand():
+    """A NOT/COPY gate whose ignored b operand references a DEAD gate must
+    rebuild with b pinned to CONST0, not gather the dropped wire's -1."""
+    g = LogicGraph(1)
+    i0 = g.input_wire(0)
+    dead = g.add_gate(OpCode.AND, i0, i0)
+    live = g.add_gate(OpCode.NOT, i0, dead)        # b ignored semantically
+    g.set_outputs([live])
+    res = DeadGateElim().run(g)
+    assert res.graph.n_gates == 1
+    assert res.remap[dead] == -1
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+
+
+def test_dead_gate_elim_ignores_nop_operand_cones():
+    """NOP's result ignores its operands, so a cone whose only reader is
+    a NOP gate is dead — the rebuilt NOP pins operands to CONST0."""
+    g = LogicGraph(2)
+    cone = g.input_wire(0)
+    for _ in range(10):
+        cone = g.add_gate(OpCode.OR, cone, g.input_wire(1))
+    nop = g.add_gate(OpCode.NOP, cone, cone)
+    g.set_outputs([nop])
+    res = DeadGateElim().run(g)
+    assert res.graph.n_gates == 1                  # just the NOP survives
+    assert res.graph.gates[0] == (int(OpCode.NOP), CONST0, CONST0)
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+
+
+def test_pipeline_cache_key_distinguishes_pass_classes():
+    """Custom Pass subclasses that forget to override ``name`` must not
+    collide in the serving memo: the key carries the class identity."""
+    class A(DeadGateElim):
+        pass
+
+    class B(DeadGateElim):
+        pass
+
+    ka = PassManager([A()]).cache_key
+    kb = PassManager([B()]).cache_key
+    assert ka != kb
+    assert PassManager([A()]).cache_key == ka      # deterministic
+
+
+def test_rebalance_cuts_depth_with_remap():
+    g = LogicGraph(8)
+    w = g.input_wire(0)
+    for i in range(1, 8):
+        w = g.add_gate(OpCode.AND, w, g.input_wire(i))
+    g.set_outputs([w])
+    res = Rebalance().run(g)
+    assert levelize(res.graph).depth == 3
+    assert res.graph.n_gates == 7
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+    assert res.remap[w] == res.graph.outputs[0]
+
+
+# ---------------------------------------------------------------------------
+# the composed default pipeline
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("seed", range(5))
+def test_default_pipeline_equivalence_and_composed_remap(seed):
+    rng = np.random.default_rng(seed)
+    g = random_graph(rng, 8, 250, 10, unary_frac=0.2, locality=32)
+    X = _vectors(g)                                # full enumeration (2^8)
+    res = PassManager.default().run(g)
+    assert isinstance(res, OptResult)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+    assert res.graph.n_gates <= g.n_gates
+    assert levelize(res.graph).depth <= levelize(g).depth
+    assert_remap_contract(g, res, X)
+
+
+def test_pipeline_idempotent_on_fixed_point():
+    rng = np.random.default_rng(9)
+    g = random_graph(rng, 6, 150, 6, locality=16)
+    pm = PassManager.default()
+    once = pm.run(g).graph
+    twice = pm.run(once)
+    assert twice.graph.n_gates == once.n_gates
+    # structurally frozen graphs exit after 1 iteration (fingerprint
+    # check); count-stable renumbering churn is bounded at 2 by the
+    # (n_gates, depth) guard
+    assert twice.iterations <= 2
+    X = _vectors(g)
+    assert (twice.graph.evaluate(X) == once.evaluate(X)).all()
+    # a tiny frozen graph: true structural fixed point after 1 iteration
+    h = LogicGraph(2)
+    h.set_outputs([h.add_gate(OpCode.AND, h.input_wire(0),
+                              h.input_wire(1))])
+    hh = pm.run(pm.run(h).graph)
+    assert hh.iterations == 1
+
+
+def test_deep_serial_chain_no_recursion_error():
+    """Multi-thousand-gate single-fanout chains must optimize (and serve)
+    without blowing the recursion limit (Rebalance.collect is iterative)."""
+    g = LogicGraph(4)
+    w = g.input_wire(0)
+    for i in range(3000):
+        w = g.add_gate(OpCode.AND, w, g.input_wire(1 + i % 3))
+    g.set_outputs([w])
+    res = PassManager.default().run(g)
+    X = _vectors(g)
+    assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+    assert levelize(res.graph).depth < levelize(g).depth
+
+
+def test_compose_remaps_propagates_drops():
+    r1 = np.asarray([0, 1, 2, -1, 3])
+    r2 = np.asarray([0, -1, 2, 1])
+    out = compose_remaps(r1, r2)
+    assert out.tolist() == [0, -1, 2, -1, 1]
+
+
+def test_remap_wires_validation():
+    remap = np.asarray([0, 1, -1, 5])
+    assert remap_wires(remap, [0, 1], 10) == [0, 1]
+    with pytest.raises(ValueError, match="outside the remap domain"):
+        remap_wires(remap, [4], 10)
+    with pytest.raises(ValueError, match="dropped"):
+        remap_wires(remap, [2], 10)
+    with pytest.raises(ValueError, match="forward reference"):
+        remap_wires(remap, [3], 5)
+
+
+def test_resolve_pipeline_knob():
+    assert resolve_pipeline("none") is None
+    assert resolve_pipeline(None) is None
+    assert resolve_pipeline(False) is None
+    assert isinstance(resolve_pipeline("default"), PassManager)
+    assert isinstance(resolve_pipeline(True), PassManager)
+    pm = PassManager([DeadGateElim()])
+    assert resolve_pipeline(pm) is pm
+    with pytest.raises(ValueError, match="optimize"):
+        resolve_pipeline("aggressive")
+
+
+# ---------------------------------------------------------------------------
+# staged wiring: compiler / partition / serving cache / cost model
+# ---------------------------------------------------------------------------
+
+def test_compile_graph_optimize_knob(rng):
+    g = random_graph(rng, 9, 300, 8, locality=24)
+    X = _vectors(g)
+    raw = compile_graph(g, n_unit=16)
+    opt = compile_graph(g, n_unit=16, optimize="default")
+    custom = compile_graph(g, n_unit=16, optimize=PassManager.default())
+    assert opt.n_gates < raw.n_gates
+    assert opt.n_steps < raw.n_steps
+    assert custom.n_gates == opt.n_gates
+    for prog in (raw, opt, custom):
+        assert (execute_program_np(prog, X) == g.evaluate(X)).all()
+    with pytest.raises(ValueError, match="optimize"):
+        compile_graph(g, n_unit=16, optimize="bogus")
+
+
+def test_compile_graph_optimize_ignores_stale_levelization(rng):
+    """A caller-supplied levelization of the RAW graph must not leak into
+    the optimized schedule."""
+    g = random_graph(rng, 6, 120, 6, locality=16)
+    lv_raw = levelize(g)
+    prog = compile_graph(g, n_unit=8, lv=lv_raw, optimize="default")
+    X = _vectors(g)
+    assert (execute_program_np(prog, X) == g.evaluate(X)).all()
+
+
+def test_partition_optimize_per_cluster(rng):
+    from repro.core.partition import execute_partitions, partition
+    g = random_graph(rng, 10, 400, 16, locality=40)
+    raw = partition(g, max_gates=120)
+    opt = partition(g, max_gates=120, optimize="default")
+    X = _vectors(g)
+    want = g.evaluate(X)
+    assert (execute_partitions(raw, X) == want).all()
+    assert (execute_partitions(opt, X) == want).all()
+    assert [p.output_indices for p in opt] == \
+        [p.output_indices for p in raw]
+    assert sum(p.graph.n_gates for p in opt) < \
+        sum(p.graph.n_gates for p in raw)
+
+
+def test_program_cache_keys_on_post_opt_fingerprint(rng):
+    """Structurally different raw graphs with one optimized form share a
+    single compiled entry (the serving cache-keying change)."""
+    from repro.serve import LogicEngine, ProgramCache
+
+    def base_graph():
+        g = LogicGraph(3)
+        a, b, c = (g.input_wire(i) for i in range(3))
+        w = g.add_gate(OpCode.AND, a, b)
+        g.set_outputs([g.add_gate(OpCode.OR, w, c)])
+        return g
+
+    g1 = base_graph()
+    g2 = LogicGraph(3)                      # same function, noisy structure
+    a, b, c = (g2.input_wire(i) for i in range(3))
+    g2.add_gate(OpCode.XOR, a, c)           # dead
+    w = g2.add_gate(OpCode.AND, b, a)       # commuted
+    nn = g2.add_gate(OpCode.NOT, g2.add_gate(OpCode.NOT, w))  # double-NOT
+    g2.set_outputs([g2.add_gate(OpCode.OR, nn, c)])
+    assert g1.fingerprint() != g2.fingerprint()
+
+    cache = ProgramCache()
+    eng = LogicEngine(n_unit=8, capacity=32, cache=cache)
+    X = _vectors(g1)
+    assert (eng.serve(g1, X) == g1.evaluate(X)).all()
+    assert (eng.serve(g2, X) == g1.evaluate(X)).all()
+    assert cache.misses == 1 and cache.hits == 1 and len(cache) == 1
+
+    # optimize="none" keys on the raw fingerprints -> two entries
+    raw_cache = ProgramCache()
+    raw_eng = LogicEngine(n_unit=8, capacity=32, cache=raw_cache,
+                          optimize="none")
+    raw_eng.serve(g1, X)
+    raw_eng.serve(g2, X)
+    assert raw_cache.misses == 2
+
+
+def test_program_cache_budget_normalizes_on_optimized_gates(rng):
+    """A budget the OPTIMIZED graph fits under serves monolithically and
+    shares the no-budget entry."""
+    from repro.serve import ProgramCache
+    g = random_graph(rng, 8, 300, 8, locality=24)
+    pm = PassManager.default()
+    assert pm.run(g).graph.n_gates < g.n_gates
+    cache = ProgramCache()
+    mono = cache.get(g, 8, pipeline=pm)
+    budget = cache.get(g, 8, max_gates=g.n_gates, pipeline=pm)
+    assert budget is mono                   # raw-size budget is unbinding
+    assert cache.misses == 1 and cache.hits == 1
+
+
+def test_ffcl_stats_optimized_path(rng):
+    from repro.core.cost_model import CostModel, FfclStats
+    from repro.core.optimizer import sweep
+    g = random_graph(rng, 10, 400, 12, locality=32)
+    raw = FfclStats.from_graph(g)
+    opt = FfclStats.from_graph(g, optimized=True)
+    assert opt.n_gates < raw.n_gates
+    assert opt.depth <= raw.depth
+    model = CostModel()
+    units = [8, 32, 128]
+    res_raw = sweep(model, [(raw, 4, 128)], units)
+    res_opt = sweep(model, [(opt, 4, 128)], units)
+    assert res_opt.best_cycles < res_raw.best_cycles
+
+
+def test_copy_preserves_fingerprint_cache(rng):
+    g = random_graph(rng, 6, 80, 4, locality=16)
+    fp = g.fingerprint()
+    c = g.copy()
+    assert getattr(c, "_fingerprint_cache", None) is not None
+    assert c.fingerprint() == fp
+    # the carried cache must still invalidate on mutation
+    c.add_gate(OpCode.NOT, c.input_wire(0))
+    c.set_outputs([c.n_wires - 1])
+    assert c.fingerprint() != fp
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: randomized structure coverage
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def graphs(draw):
+        seed = draw(st.integers(0, 2 ** 31 - 1))
+        rng = np.random.default_rng(seed)
+        return random_graph(rng, draw(st.integers(1, 10)),
+                            draw(st.integers(1, 150)),
+                            draw(st.integers(1, 8)),
+                            unary_frac=draw(st.sampled_from([0.0, 0.2, 0.5])),
+                            locality=draw(st.sampled_from([4, 32, 1000])))
+
+    @settings(max_examples=40, deadline=None)
+    @given(graphs(), st.sampled_from(range(len(ALL_PASSES))))
+    def test_hypothesis_single_pass_equivalence(g, pass_idx):
+        X = _vectors(g)
+        res = ALL_PASSES[pass_idx].run(g)
+        assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+        assert_remap_contract(g, res, X)
+
+    @settings(max_examples=30, deadline=None)
+    @given(graphs())
+    def test_hypothesis_pipeline_equivalence(g):
+        X = _vectors(g)
+        res = PassManager.default().run(g)
+        assert (res.graph.evaluate(X) == g.evaluate(X)).all()
+        assert res.graph.n_gates <= g.n_gates
+        assert levelize(res.graph).depth <= levelize(g).depth
+        assert_remap_contract(g, res, X)
+
+    @settings(max_examples=20, deadline=None)
+    @given(graphs(), st.sampled_from([1, 8, 64]))
+    def test_hypothesis_compiled_optimized_equivalence(g, n_unit):
+        X = _vectors(g)
+        prog = compile_graph(g, n_unit=n_unit, alloc="liveness",
+                             optimize="default")
+        assert (execute_program_np(prog, X) == g.evaluate(X)).all()

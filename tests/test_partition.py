@@ -6,12 +6,10 @@ pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.cost_model import CostModel
 from repro.core.gate_ir import random_graph
 from repro.core.partition import (compile_partitions, duplication_factor,
                                   execute_partitions, output_cones,
                                   partition)
-from repro.core.scheduler import execute_program_np
 from repro.core.simulator import simulate_pipeline
 from repro.kernels.logic_dsp import logic_infer_bits
 

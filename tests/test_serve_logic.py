@@ -136,7 +136,9 @@ def test_shared_cache_engines_keep_their_own_runners(rng):
     assert (a.serve(g, X) == g.evaluate(X)).all()
     assert (b.serve(g, X) == g.evaluate(X)).all()    # cache hit, own runner
     assert cache.misses == 1 and cache.hits >= 1
-    entry = cache.get(g, 16)
+    # fetch the entry the engines shared: keyed on the POST-optimization
+    # fingerprint, so the lookup goes through the same pass pipeline
+    entry = cache.get(g, 16, pipeline=a.pipeline)
     assert len(entry.runners) == 2                   # one trace per config
 
 
@@ -266,7 +268,8 @@ def test_partitioned_serving_equivalence(rng):
     """Pipelined multi-program serving == monolithic, bit for bit."""
     g = random_graph(rng, 12, 400, 20, locality=48)
     eng = LogicEngine(n_unit=16, capacity=96, max_gates=150)
-    entry = eng.cache.get(g, 16, "liveness", 150)
+    # fetch the entry the engine serves (post-optimization key)
+    entry = eng.cache.get(g, 16, "liveness", 150, pipeline=eng.pipeline)
     assert len(entry.programs) >= 2      # actually partitioned
     X = rng.integers(0, 2, (70, 12)).astype(bool)
     got = eng.serve(g, X)

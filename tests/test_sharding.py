@@ -1,8 +1,6 @@
 """Sharding rules: divisibility degradation + spec shapes (1-device mesh
 suffices: rules are pure functions of mesh axis sizes)."""
 import jax
-import numpy as np
-import pytest
 from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_config

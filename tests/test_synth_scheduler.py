@@ -6,7 +6,7 @@ pytest.importorskip(
     "hypothesis", reason="property tests need hypothesis (requirements-dev)")
 from hypothesis import given, settings, strategies as st
 
-from repro.core.gate_ir import LogicGraph, OpCode, UNARY, random_graph
+from repro.core.gate_ir import LogicGraph, OpCode, random_graph
 from repro.core.levelize import levelize
 from repro.core.scheduler import compile_graph, execute_program_np
 from repro.core.synth import dead_gate_elim, optimize, rebalance
@@ -90,8 +90,8 @@ def test_eq23_subkernel_count(g, n_unit):
 @given(graphs())
 def test_liveness_never_larger(g):
     d = compile_graph(g, n_unit=8, alloc="direct")
-    l = compile_graph(g, n_unit=8, alloc="liveness")
-    assert l.n_addr <= d.n_addr
+    lv = compile_graph(g, n_unit=8, alloc="liveness")
+    assert lv.n_addr <= d.n_addr
 
 
 def test_dead_gate_elim_removes_unreachable(rng):

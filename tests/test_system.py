@@ -2,7 +2,6 @@
 import subprocess
 import sys
 
-import numpy as np
 import pytest
 
 from repro.core.cost_model import CostModel, FfclStats

@@ -1,6 +1,5 @@
 """Trainer, checkpointing, fault tolerance, optimizer, compression."""
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
