@@ -5,7 +5,10 @@ Prints ``name,us_per_call,derived`` CSV rows. Usage:
 
 ``--json`` additionally writes the rows as ``{name: {us, derived}}`` —
 the machine-readable perf trajectory (``BENCH_logic.json``) that future
-PRs diff against.
+PRs diff against.  Every row that compiles a logic program also records
+the serialized :class:`~repro.core.spec.CompileSpec` it compiled
+against (``"spec"`` key), so the perf trajectory is attributable to an
+exact compilation target.
 """
 from __future__ import annotations
 
@@ -21,13 +24,16 @@ from repro.core.gate_ir import random_graph
 from repro.core.optimizer import binary_search, sweep
 from repro.core.scheduler import compile_graph
 from repro.core.simulator import simulate_no_pipeline, simulate_pipeline
+from repro.core.spec import CompileSpec
 
-ROWS: list[tuple[str, float, str]] = []
+ROWS: list[tuple[str, float, str, dict | None]] = []
 CLOCK = TpuFabric().clock_hz
 
 
-def row(name: str, us: float, derived: str = "") -> None:
-    ROWS.append((name, us, derived))
+def row(name: str, us: float, derived: str = "",
+        spec: CompileSpec | None = None) -> None:
+    ROWS.append((name, us, derived,
+                 None if spec is None else spec.to_dict()))
     print(f"{name},{us:.3f},{derived}")
 
 
@@ -47,7 +53,10 @@ def bench_cost_model_validation(quick: bool) -> None:
     m = 16 if quick else 64     # filters pipelined per launch
     errs = []
     for n_unit in (64, 256, 1024):
-        prog = compile_graph(lw.graph, n_unit=n_unit)
+        # the workload graphs are pre-optimized (workloads.py), so the
+        # compile target itself runs no pass pipeline
+        spec = CompileSpec(n_unit=n_unit, optimize="none")
+        prog = compile_graph(lw.graph, spec)
         sim = simulate_pipeline([prog] * m, n_input_vectors=lw.n_patches)
         # stats from the compiled program: with step fusion enabled the
         # model must charge the scheduled step count, not eq. 23's
@@ -56,7 +65,7 @@ def bench_cost_model_validation(quick: bool) -> None:
         err = (mdl - sim.total_cycles) / sim.total_cycles
         errs.append(abs(err))
         row(f"fig6.model_vs_sim.n{n_unit}", cycles_us(sim.total_cycles),
-            f"model_err={err:+.1%}")
+            f"model_err={err:+.1%}", spec=spec)
     row("fig6.max_abs_err", 0.0, f"{max(errs):.1%} (paper: <10%)")
 
 
@@ -156,12 +165,14 @@ def bench_resources(quick: bool) -> None:
     w_words = -(-lw.n_patches // 32)
     for label, n_unit in (("large", 1000), ("medium", 250), ("small", 180),
                           ("tiny", 100)):
-        prog = compile_graph(lw.graph, n_unit=n_unit, alloc="liveness")
+        spec = CompileSpec(n_unit=n_unit, alloc="liveness", optimize="none")
+        prog = compile_graph(lw.graph, spec)
         data_buf = prog.n_addr * w_words * 4
         streams = prog.n_steps * prog.n_unit * (3 * 4 + 1)
         row(f"table4.{label}.n{n_unit}", 0.0,
             f"vmem_data={data_buf / 2 ** 10:.0f}KiB "
-            f"streams={streams / 2 ** 10:.0f}KiB steps={prog.n_steps}")
+            f"streams={streams / 2 ** 10:.0f}KiB steps={prog.n_steps}",
+            spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -176,7 +187,10 @@ def bench_kernels(quick: bool) -> None:
 
     rng = np.random.default_rng(0)
     g = random_graph(rng, 32, 1500, 16, locality=128)
-    prog = compile_graph(g, n_unit=64, alloc="liveness")
+    # optimize="none" keeps the kernel row comparable across snapshots
+    # (the measured program is exactly the 1500-gate random netlist)
+    spec = CompileSpec(n_unit=64, alloc="liveness", optimize="none")
+    prog = compile_graph(g, spec)
     X = rng.integers(0, 2, (4096, 32)).astype(bool)
     logic_infer_bits(prog, X)                       # compile
     t0 = time.perf_counter()
@@ -185,7 +199,7 @@ def bench_kernels(quick: bool) -> None:
         logic_infer_bits(prog, X)
     row("kernel.logic_dsp.interp", (time.perf_counter() - t0) / reps * 1e6,
         f"gates={prog.n_gates} steps={prog.n_steps} batch=4096 "
-        f"homog={prog.homogeneous.mean():.0%}")
+        f"homog={prog.homogeneous.mean():.0%}", spec=spec)
 
     a = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
     b = jnp.asarray(rng.integers(0, 2, (256, 2304)), jnp.uint8)
@@ -215,7 +229,8 @@ def bench_serve_logic(quick: bool) -> None:
     reps = 5 if quick else 10
 
     # batched: slot-packed requests share fabric invocations
-    eng = LogicEngine(n_unit=64, capacity=256)
+    spec = CompileSpec(n_unit=64)
+    eng = LogicEngine(spec, capacity=256)
     for bits in reqs:                                  # compile + jit warmup
         eng.serve(g, bits)
     eng.reset_telemetry()       # occupancy of the timed waves only
@@ -229,13 +244,13 @@ def bench_serve_logic(quick: bool) -> None:
     st = eng.stats()
     row("serve.logic_dsp.batched", dt * 1e6,
         f"samples_per_s={total / dt:.0f} reqs={len(sizes)} "
-        f"occ={st['mean_occupancy']:.0%}")
+        f"occ={st['mean_occupancy']:.0%}", spec=spec)
 
     # single-shot baseline: one fabric invocation per request (per-shape
     # jits warmed; same optimized netlist as the engine serves, so the
     # gap left is the engine's batching amortization)
     from repro.kernels.logic_dsp import logic_infer_bits
-    prog = compile_graph(g, n_unit=64, alloc="liveness", optimize="default")
+    prog = compile_graph(g, spec)
     for bits in reqs:
         logic_infer_bits(prog, bits)
     t0 = time.perf_counter()
@@ -245,10 +260,10 @@ def bench_serve_logic(quick: bool) -> None:
     dt_single = (time.perf_counter() - t0) / reps
     row("serve.logic_dsp.single_shot", dt_single * 1e6,
         f"samples_per_s={total / dt_single:.0f} "
-        f"vs_batched={dt_single / dt:.2f}x")
+        f"vs_batched={dt_single / dt:.2f}x", spec=spec)
 
     # program-cache effect: structurally equal resubmission vs cold compile
-    fresh = LogicEngine(n_unit=64, capacity=256)
+    fresh = LogicEngine(spec, capacity=256)
     probe = reqs[0]
     t0 = time.perf_counter()
     fresh.serve(g, probe)                              # compile + trace
@@ -260,11 +275,11 @@ def bench_serve_logic(quick: bool) -> None:
     warm = time.perf_counter() - t0
     row("serve.logic_dsp.program_cache", warm * 1e6,
         f"cold_us={cold * 1e6:.0f} speedup={cold / max(warm, 1e-9):.0f}x "
-        f"hits={fresh.cache.hits} misses={fresh.cache.misses}")
+        f"hits={fresh.cache.hits} misses={fresh.cache.misses}", spec=spec)
 
     # partitioned pipeline serving (multi-FFCL task pipelining)
-    peng = LogicEngine(n_unit=64, capacity=256,
-                       max_gates=400 if quick else 700)
+    pspec = spec.with_(max_gates=400 if quick else 700)
+    peng = LogicEngine(pspec, capacity=256)
     for bits in reqs:
         peng.serve(g, bits)
     peng.reset_telemetry()
@@ -275,11 +290,10 @@ def bench_serve_logic(quick: bool) -> None:
         for uid in uids:
             peng.result(uid)
     dt_part = (time.perf_counter() - t0) / reps
-    n_parts = len(peng.cache.get(g, peng.n_unit, peng.alloc, peng.max_gates,
-                                 pipeline=peng.pipeline).programs)
+    n_parts = len(peng.cache.get(g, peng.spec).programs)
     row("serve.logic_dsp.partitioned", dt_part * 1e6,
         f"programs={n_parts} samples_per_s={total / dt_part:.0f} "
-        f"vs_mono={dt_part / dt:.2f}x")
+        f"vs_mono={dt_part / dt:.2f}x", spec=pspec)
 
 
 # ---------------------------------------------------------------------------
@@ -293,11 +307,12 @@ def bench_flow_e2e(quick: bool) -> None:
     cfg = FlowConfig(n_features=10 if quick else 12,
                      hidden=(8, 6) if quick else (10, 8),
                      n_classes=4, n_samples=1200 if quick else 4000,
-                     train_steps=120 if quick else 300, n_unit=32)
+                     train_steps=120 if quick else 300,
+                     spec=CompileSpec(n_unit=32))
     report, clf = run_flow(cfg)
     row("flow.e2e.convert", report.convert_s * 1e6,
         f"layers={len(report.layers)} gates={report.n_gates} "
-        f"steps={report.n_steps}")
+        f"steps={report.n_steps}", spec=cfg.spec)
     row("flow.e2e.parity", 0.0,
         f"parity={'EXACT' if report.parity else 'approx'} "
         f"bit_identical={report.bit_identical} "
@@ -311,7 +326,7 @@ def bench_flow_e2e(quick: bool) -> None:
     # reported accuracies used
     _, _, xv, _ = cfg.load_data()
     bits = input_bits(xv)
-    engine = LogicEngine(n_unit=cfg.n_unit, alloc=cfg.alloc, capacity=256)
+    engine = LogicEngine(cfg.spec, capacity=256)
     reps = 3 if quick else 5
     for backend in ("reference", "pallas", "engine"):
         clf.hidden_bits(bits, backend=backend, engine=engine)   # warm
@@ -320,7 +335,8 @@ def bench_flow_e2e(quick: bool) -> None:
             clf.hidden_bits(bits, backend=backend, engine=engine)
         dt = (time.perf_counter() - t0) / reps
         row(f"flow.e2e.{backend}", dt * 1e6,
-            f"samples_per_s={len(bits) / dt:.0f} batch={len(bits)}")
+            f"samples_per_s={len(bits) / dt:.0f} batch={len(bits)}",
+            spec=cfg.spec)
 
 
 # ---------------------------------------------------------------------------
@@ -333,24 +349,28 @@ def bench_compile(quick: bool) -> None:
     wl = workloads.build_workload([workloads.VGG16_LAYERS[6]])
     g = wl[0].graph
     reps = 20 if quick else 50
+    # optimize="none": these rows time the SCHEDULER (levelize -> sort ->
+    # fuse -> alloc -> emit), not the pass pipeline (opt.* rows time that)
     for alloc in ("direct", "liveness"):
-        compile_graph(g, n_unit=256, alloc=alloc)          # warm caches
+        spec = CompileSpec(n_unit=256, alloc=alloc, optimize="none")
+        compile_graph(g, spec)                             # warm caches
         t0 = time.perf_counter()
         for _ in range(reps):
-            prog = compile_graph(g, n_unit=256, alloc=alloc)
+            prog = compile_graph(g, spec)
         row(f"compile.vgg16_conv7.{alloc}",
             (time.perf_counter() - t0) / reps * 1e6,
-            f"gates={g.n_gates} steps={prog.n_steps}")
+            f"gates={g.n_gates} steps={prog.n_steps}", spec=spec)
     # VGG16-scale stress: tens of thousands of gates through the same path
     rng = np.random.default_rng(7)
     n_gates = 10_000 if quick else 30_000
     big = random_graph(rng, 64, n_gates, 32, locality=256)
     for alloc in ("direct", "liveness"):
+        spec = CompileSpec(n_unit=256, alloc=alloc, optimize="none")
         t0 = time.perf_counter()
-        prog = compile_graph(big, n_unit=256, alloc=alloc)
+        prog = compile_graph(big, spec)
         row(f"compile.random{n_gates // 1000}k.{alloc}",
             (time.perf_counter() - t0) * 1e6,
-            f"gates={big.n_gates} steps={prog.n_steps}")
+            f"gates={big.n_gates} steps={prog.n_steps}", spec=spec)
 
 
 # ---------------------------------------------------------------------------
@@ -370,6 +390,7 @@ def bench_opt(quick: bool) -> None:
 
     def ab_rows(tag: str, raw_graphs: list, n_unit: int) -> None:
         pm = PassManager.default()
+        spec = CompileSpec(n_unit=n_unit, alloc="liveness", optimize="none")
         t0 = time.perf_counter()
         opt_graphs = [pm.run(g).graph for g in raw_graphs]
         opt_us = (time.perf_counter() - t0) * 1e6
@@ -378,23 +399,22 @@ def bench_opt(quick: bool) -> None:
         row(f"opt.{tag}.gates", opt_us,
             f"raw={g_raw} opt={g_opt} ({(g_opt - g_raw) / g_raw:+.0%})")
         t0 = time.perf_counter()
-        s_raw = sum(compile_graph(g, n_unit=n_unit, alloc="liveness").n_steps
-                    for g in raw_graphs)
+        s_raw = sum(compile_graph(g, spec).n_steps for g in raw_graphs)
         raw_c = (time.perf_counter() - t0) * 1e6
         t0 = time.perf_counter()
-        s_opt = sum(compile_graph(g, n_unit=n_unit, alloc="liveness").n_steps
-                    for g in opt_graphs)
+        s_opt = sum(compile_graph(g, spec).n_steps for g in opt_graphs)
         opt_c = (time.perf_counter() - t0) * 1e6
         row(f"opt.{tag}.steps", opt_c,
             f"raw={s_raw} opt={s_opt} ({(s_opt - s_raw) / s_raw:+.0%}) "
-            f"raw_compile_us={raw_c:.0f}")
+            f"raw_compile_us={raw_c:.0f}", spec=spec)
 
     # (a) the e2e NullaNet classifier workload (same config family as
     # flow.e2e.*): every hidden layer, raw espresso factoring vs pipeline
     cfg = FlowConfig(n_features=10 if quick else 12,
                      hidden=(8, 6) if quick else (10, 8),
                      n_classes=4, n_samples=1200 if quick else 4000,
-                     train_steps=120 if quick else 300, n_unit=32)
+                     train_steps=120 if quick else 300,
+                     spec=CompileSpec(n_unit=32))
     xt, yt, _, _ = cfg.load_data()
     mcfg = BinaryMLPConfig(n_features=cfg.n_features, hidden=cfg.hidden,
                            n_classes=cfg.n_classes, seed=cfg.seed)
@@ -421,7 +441,8 @@ def bench_opt(quick: bool) -> None:
 def bench_pipelining(quick: bool) -> None:
     rng = np.random.default_rng(1)
     g = random_graph(rng, 64, 3000, 32, locality=256)
-    progs = [compile_graph(g, n_unit=128)] * (8 if quick else 32)
+    progs = [compile_graph(g, CompileSpec(n_unit=128, optimize="none"))
+             ] * (8 if quick else 32)
     pipe = simulate_pipeline(progs, n_input_vectors=4096)
     seq = simulate_no_pipeline(progs, n_input_vectors=4096)
     row("fig8.pipelined", cycles_us(pipe.total_cycles),
@@ -451,8 +472,9 @@ def main() -> None:
     print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
     if args.json:
         with open(args.json, "w") as f:
-            json.dump({name: {"us": round(us, 3), "derived": derived}
-                       for name, us, derived in ROWS}, f, indent=1,
+            json.dump({name: {"us": round(us, 3), "derived": derived,
+                              **({} if spec is None else {"spec": spec})}
+                       for name, us, derived, spec in ROWS}, f, indent=1,
                       sort_keys=True)
             f.write("\n")
         print(f"# wrote {args.json}")

@@ -13,7 +13,7 @@ from dataclasses import dataclass
 
 import numpy as np
 
-from repro.core.cost_model import FfclStats
+from repro.core.cost_model import FfclStats, LayerLoad
 from repro.core.espresso import minimize, sop_to_graph
 from repro.core.gate_ir import LogicGraph
 from repro.core.synth import optimize
@@ -95,6 +95,9 @@ def build_workload(layers, seed: int = 0,
     return out
 
 
-def cost_model_layers(workload: list[LayerWorkload]):
-    """-> [(stats, n_filters, n_input_vectors)] for CostModel.network_cycles."""
-    return [(lw.stats, lw.n_filters, lw.n_patches) for lw in workload]
+def cost_model_layers(workload: list[LayerWorkload]) -> list[LayerLoad]:
+    """-> typed :class:`LayerLoad` list for ``CostModel.network_cycles``
+    and the optimizer searches (legacy tuple consumers still unpack it:
+    ``LayerLoad`` iterates as ``(stats, n_copies, n_input_vectors)``)."""
+    return [LayerLoad(stats=lw.stats, n_copies=lw.n_filters,
+                      n_input_vectors=lw.n_patches) for lw in workload]

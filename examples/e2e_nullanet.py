@@ -25,6 +25,7 @@ activations across backends.
 import argparse
 import json
 
+from repro.core.spec import CompileSpec
 from repro.flow import FlowConfig, run_flow
 
 
@@ -40,7 +41,9 @@ def main() -> None:
                     help="default 4000 (1500 with --quick)")
     ap.add_argument("--train-steps", type=int, default=None,
                     help="default 300 (120 with --quick)")
-    ap.add_argument("--n-unit", type=int, default=32)
+    ap.add_argument("--n-unit", default="32",
+                    help="compute units, or 'auto' for the paper §7.2 "
+                         "design-space search per layer (CompileSpec)")
     ap.add_argument("--alloc", choices=("direct", "liveness"),
                     default="liveness")
     ap.add_argument("--mode", choices=("auto", "enum", "isf"), default="auto")
@@ -57,12 +60,15 @@ def main() -> None:
     hidden = tuple(int(h) for h in args.hidden.split(",") if h)
     quick_default = lambda given, quick, full: \
         given if given is not None else (quick if args.quick else full)
+    spec = CompileSpec(
+        n_unit="auto" if args.n_unit == "auto" else int(args.n_unit),
+        alloc=args.alloc, optimize=args.optimize, max_gates=args.max_gates)
     cfg = FlowConfig(
         n_features=args.features, hidden=hidden, n_classes=args.classes,
         n_samples=quick_default(args.samples, 1500, 4000),
         train_steps=quick_default(args.train_steps, 120, 300),
-        n_unit=args.n_unit, alloc=args.alloc, mode=args.mode,
-        optimize=args.optimize, max_gates=args.max_gates)
+        spec=spec, mode=args.mode)
+    print(f"compilation target: {spec.to_dict()}")
 
     report, _ = run_flow(cfg, log_every=0 if args.quick else 100)
     print(report.summary())

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_config
+from repro.core.spec import CompileSpec
 from repro.data.synthetic import TokenPipeline
 from repro.models import logic_mlp
 from repro.models.layers import rms_norm, softmax_xent
@@ -88,8 +89,8 @@ def main() -> None:
     for i, bits in calib_bits:
         p = jax.tree.map(lambda a, i=i: a[i], params["blocks"])
         programs[i] = logic_mlp.ffn_to_program(
-            {"w_in": p["w_in"], "b_in": p["b_in"]}, bits, n_unit=16,
-            name=f"ffn{i}")
+            {"w_in": p["w_in"], "b_in": p["b_in"]}, bits,
+            CompileSpec(n_unit=16), name=f"ffn{i}")
         print(f"layer {i}: FFCL program {programs[i].n_gates} gates, "
               f"{programs[i].n_steps} sub-kernel steps")
 

@@ -13,6 +13,7 @@ from repro.core.cost_model import CostModel, FfclStats
 from repro.core.levelize import levelize
 from repro.core.opt import PassManager
 from repro.core.scheduler import compile_graph
+from repro.core.spec import CompileSpec
 from repro.core.verilog import parse_verilog
 from repro.kernels.logic_dsp import logic_infer_bits
 
@@ -42,10 +43,12 @@ def main() -> None:
     print(f"synthesized ({res.iterations} pipeline iters): {graph.stats()}  "
           f"level histogram={list(lv.histogram())}")
 
-    n_unit = 4
-    prog = compile_graph(graph, n_unit=n_unit, alloc="liveness")
-    print(f"scheduled on {n_unit} units: {prog.n_steps} sub-kernel steps, "
-          f"{prog.n_addr} buffer rows (paper eq. 23)")
+    # the declarative compilation target (core/spec.py): optimize="none"
+    # because the pass pipeline already ran above
+    spec = CompileSpec(n_unit=4, alloc="liveness", optimize="none")
+    prog = compile_graph(graph, spec)
+    print(f"scheduled on {spec.n_unit} units: {prog.n_steps} sub-kernel "
+          f"steps, {prog.n_addr} buffer rows (paper eq. 23)")
 
     rng = np.random.default_rng(0)
     x = rng.integers(0, 2, (1000, 5)).astype(bool)
@@ -58,7 +61,7 @@ def main() -> None:
     print("kernel output == direct evaluation == ground truth  [1000 vectors]")
 
     model = CostModel()
-    b = model.breakdown(FfclStats.from_graph(graph), n_unit, 1000)
+    b = model.breakdown(FfclStats.from_graph(graph), spec.n_unit, 1000)
     print(f"cost model: {b.n_total_pipelined:.0f} cycles "
           f"(dm={b.n_data_moves:.0f}, compute={b.n_compute:.0f}, "
           f"bound={b.bound})")

@@ -19,12 +19,13 @@ import time
 import numpy as np
 
 from repro.core.gate_ir import random_graph
+from repro.core.spec import CompileSpec
 from repro.serve import LogicEngine
 
 
 def main() -> None:
     rng = np.random.default_rng(0)
-    engine = LogicEngine(n_unit=64, capacity=256)
+    engine = LogicEngine(CompileSpec(n_unit=64), capacity=256)
     print(f"engine: capacity={engine.capacity} samples/invocation, "
           f"n_unit={engine.n_unit}, devices={engine.stats()['n_devices']}")
 
@@ -55,16 +56,15 @@ def main() -> None:
           f"hits={engine.cache.hits} misses={engine.cache.misses})")
 
     # -- 3. partitioned pipeline for an over-budget graph -------------------
-    part_engine = LogicEngine(n_unit=64, capacity=256, max_gates=600,
-                              cache=engine.cache)
+    part_engine = LogicEngine(CompileSpec(n_unit=64, max_gates=600),
+                              capacity=256, cache=engine.cache)
     big = random_graph(rng, 24, 2000, 24, locality=96)
     x = rng.integers(0, 2, (130, 24)).astype(bool)
     out = part_engine.serve(big, x)
     assert (out == big.evaluate(x)).all()
     # keyed on the POST-optimization fingerprint: fetch with the engine's
-    # pipeline to get the entry it actually served
-    entry = part_engine.cache.get(big, 64, "liveness", 600,
-                                  pipeline=part_engine.pipeline)
+    # spec to get the entry it actually served
+    entry = part_engine.cache.get(big, part_engine.spec)
     print(f"over-budget graph ({big.n_gates} gates) served as "
           f"{len(entry.programs)} pipelined sub-programs  [bit-exact]")
 

@@ -1,3 +1,12 @@
 # The paper's primary contribution — implement the SYSTEM here
 # (scheduler, optimizer, data path, serving loop, etc.) in the
 # host framework. Add sibling subpackages for substrates.
+#
+# The declarative compile API (DESIGN.md §8) is re-exported at the
+# package root: one CompileSpec value describes the full compilation
+# target, and LogicCompiler is the one facade that turns (graph, spec)
+# into a CompiledArtifact.
+from repro.core.compiler import CompiledArtifact, LogicCompiler
+from repro.core.spec import CompileSpec
+
+__all__ = ["CompileSpec", "CompiledArtifact", "LogicCompiler"]

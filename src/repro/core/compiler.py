@@ -1,0 +1,188 @@
+"""The unified compile facade: ``LogicCompiler.compile(graph, spec)``.
+
+Before the :class:`~repro.core.spec.CompileSpec` redesign the repo had
+three divergent compile paths — direct ``scheduler.compile_graph``,
+``partition`` + ``compile_partitions`` for over-budget graphs, and the
+serving registry's private ``ProgramCache`` miss path — each re-threading
+the same loose kwargs and re-implementing the optimize/partition/permute
+bookkeeping.  :class:`LogicCompiler` is the one place that sequence
+lives:
+
+    optimize (core/opt.py pipeline)
+      -> resolve n_unit="auto" (optimizer.binary_search on the
+         post-optimization eq. 23 stats — the paper's §7.2 design-space
+         search as a spec value)
+        -> partition if the budget binds (core/partition.py, with
+           per-cluster re-optimization)
+          -> schedule each program (core/scheduler.py)
+            -> output permutation for word-level re-assembly
+
+and :class:`CompiledArtifact` is the one result type: the resolved spec,
+the post-optimization graph, the program pipeline, the output
+permutation, and the compile/DSE provenance.  ``serve.ProgramCache``
+compiles through this facade (keying entries on
+``spec.cache_key()``); direct callers get the same artifact without a
+cache.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.cost_model import CostModel, FfclStats, LayerLoad
+from repro.core.gate_ir import LogicGraph
+from repro.core.optimizer import SearchResult, binary_search
+from repro.core.partition import (compile_partitions, output_permutation,
+                                  partition)
+from repro.core.scheduler import LogicProgram, compile_graph
+from repro.core.spec import CompileSpec
+
+
+@dataclass(frozen=True)
+class CompiledArtifact:
+    """Everything one compilation of (graph, spec) produced.
+
+    ``spec`` is the *resolved* target — ``n_unit`` is always concrete
+    (``"auto"`` requests record the ``binary_search`` pick, with the
+    probe trail in ``search``) — so ``spec.cache_key()`` plus
+    ``graph.fingerprint()`` names this artifact exactly, and
+    ``spec.to_dict()`` is what benchmarks/reports persist.
+    """
+
+    spec: CompileSpec                      # resolved (concrete n_unit)
+    graph: LogicGraph                      # post-optimization graph
+    programs: tuple[LogicProgram, ...]     # 1 = monolithic, >1 = pipeline
+    output_perm: np.ndarray                # concat(part outs)[perm] == orig
+    compile_s: float = 0.0
+    search: SearchResult | None = field(default=None, compare=False)
+
+    @property
+    def partitioned(self) -> bool:
+        return len(self.programs) > 1
+
+    @property
+    def program(self) -> LogicProgram:
+        """The single program of a monolithic artifact."""
+        if self.partitioned:
+            raise ValueError(
+                f"artifact is a {len(self.programs)}-program pipeline; "
+                "iterate .programs")
+        return self.programs[0]
+
+    @property
+    def n_inputs(self) -> int:
+        return self.graph.n_inputs
+
+    @property
+    def n_outputs(self) -> int:
+        return self.graph.n_outputs
+
+    def device_arrays(self) -> list[dict]:
+        """Per-program device arrays (memoized per program object by the
+        kernel layer; imported lazily so core stays importable without
+        jax)."""
+        from repro.kernels.logic_dsp.ops import program_arrays
+        return [program_arrays(p) for p in self.programs]
+
+    def execute(self, inputs: np.ndarray) -> np.ndarray:
+        """Numpy-oracle execution of the whole artifact (every program
+        over the same input slab, re-assembled in original output
+        order) — the semantic contract the kernel/serving paths are
+        tested against."""
+        from repro.core.scheduler import execute_program_np
+        outs = [execute_program_np(p, inputs) for p in self.programs]
+        cat = outs[0] if len(outs) == 1 else np.concatenate(outs, axis=1)
+        return cat[:, self.output_perm]
+
+    def stats(self) -> dict:
+        per_prog = [p.stats() for p in self.programs]
+        return {
+            "spec": self.spec.to_dict(),
+            "n_programs": len(self.programs),
+            "n_gates": sum(s["n_gates"] for s in per_prog),
+            "n_steps": sum(s["n_steps"] for s in per_prog),
+            "depth": max((s["depth"] for s in per_prog), default=0),
+            "compile_s": self.compile_s,
+            **({"search_probes": len(self.search.evaluations)}
+               if self.search is not None else {}),
+        }
+
+
+class LogicCompiler:
+    """Compile :class:`LogicGraph` s against declarative
+    :class:`CompileSpec` targets.
+
+    The constructor holds only the *design-space context* for
+    ``n_unit="auto"`` resolution — the cost model and search bounds of
+    the paper's §7.2 binary search, plus the SIMD batch the latency
+    model assumes.  Everything about one compilation lives on the spec.
+    """
+
+    def __init__(self, model: CostModel | None = None,
+                 n_unit_max: int = 4096, n_unit_min: int = 1,
+                 n_input_vectors: int = 1024):
+        self.model = model or CostModel()
+        self.n_unit_max = n_unit_max
+        self.n_unit_min = n_unit_min
+        self.n_input_vectors = n_input_vectors
+
+    # -- n_unit="auto" ------------------------------------------------------
+
+    def resolve(self, graph: LogicGraph, spec: CompileSpec, *,
+                assume_optimized: bool = False
+                ) -> tuple[CompileSpec, SearchResult | None]:
+        """Resolve ``n_unit="auto"`` to the ``binary_search`` Pareto
+        pick for ``graph`` (a no-op for concrete specs).
+
+        The search probes the POST-optimization eq. 23 stats
+        (``FfclStats.from_graph(optimized=spec)``) — the gate counts the
+        scheduler will actually emit.  ``assume_optimized=True`` skips
+        re-running the pipeline when ``graph`` already reflects
+        ``spec.optimize`` (e.g. the serving registry's memoized
+        optimized graph).
+        """
+        if spec.resolved:
+            return spec, None
+        stats = FfclStats.from_graph(
+            graph, optimized=False if assume_optimized else spec)
+        search = binary_search(
+            self.model, [LayerLoad(stats, 1, self.n_input_vectors)],
+            n_unit_max=self.n_unit_max, n_unit_min=self.n_unit_min)
+        return spec.with_(n_unit=search.best_n_unit), search
+
+    # -- the one compile path -----------------------------------------------
+
+    def compile(self, graph: LogicGraph, spec: CompileSpec | None = None, *,
+                assume_optimized: bool = False) -> CompiledArtifact:
+        """Compile ``graph`` to a :class:`CompiledArtifact` per ``spec``
+        (canonical defaults when omitted).
+
+        Unifies the three historical paths: the optimize stage runs
+        once up front (unless ``assume_optimized``), ``"auto"`` unit
+        counts resolve via :meth:`resolve`, a binding ``max_gates``
+        budget routes through output-cone partitioning with per-cluster
+        re-optimization, and partition sub-programs are scheduled with
+        the optimize stage stripped (their cones are already optimized
+        — re-running the pipeline would be pure waste).
+        """
+        spec = spec if spec is not None else CompileSpec()
+        t0 = time.perf_counter()
+        pipeline = spec.pipeline
+        g = graph if (assume_optimized or pipeline is None) \
+            else pipeline.run(graph).graph
+        spec, search = self.resolve(g, spec, assume_optimized=True)
+        mono = spec.with_(optimize="none", max_gates=None)
+        if spec.max_gates is not None and g.n_gates > spec.max_gates:
+            # per-cluster re-optimization: extraction re-exposes slack
+            # inside duplicated cones that global passes could not see
+            parts = partition(g, spec)
+            programs = tuple(compile_partitions(parts, mono))
+            perm = output_permutation(parts, g.n_outputs)
+        else:
+            programs = (compile_graph(g, mono),)
+            perm = np.arange(g.n_outputs, dtype=np.int64)
+        return CompiledArtifact(
+            spec=spec, graph=g, programs=programs, output_perm=perm,
+            compile_s=time.perf_counter() - t0, search=search)

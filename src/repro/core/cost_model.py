@@ -140,11 +140,13 @@ class FfclStats:
 
         ``optimized`` is the shared core/opt.py knob (``True`` /
         ``"default"`` for the default pass pipeline, a ``PassManager``
-        for a custom one, ``False`` / ``"none"`` for raw): design-space
-        sweeps (``optimizer.sweep``/``binary_search``) should probe the
-        post-optimization gate counts the scheduler will actually emit —
-        probing raw synthesis output systematically overstates both the
-        compute and address-stream terms of eq. 22.
+        for a custom one, a :class:`~repro.core.spec.CompileSpec` for
+        its resolved pipeline, ``False`` / ``"none"`` for raw):
+        design-space sweeps (``optimizer.sweep``/``binary_search``)
+        should probe the post-optimization gate counts the scheduler
+        will actually emit — probing raw synthesis output
+        systematically overstates both the compute and address-stream
+        terms of eq. 22.
         """
         from repro.core.levelize import levelize
         from repro.core.opt import resolve_pipeline
@@ -154,6 +156,58 @@ class FfclStats:
         lv = levelize(graph)
         return FfclStats(graph.n_gates, lv.depth, graph.n_inputs,
                          graph.n_outputs, lv.histogram())
+
+
+@dataclass(frozen=True)
+class LayerLoad:
+    """One network layer's load for the whole-network cost equations.
+
+    Replaces the untyped ``(stats, n_filters, n_input_vectors)`` tuples
+    ``CostModel.network_cycles`` and the design-space searches
+    (``optimizer.sweep``/``binary_search``) used to take:
+
+      * ``stats``           — the representative FFCL module's
+        :class:`FfclStats` (one filter / neuron of the layer);
+      * ``n_copies``        — how many structurally-like modules run
+        back-to-back with task pipelining (paper eq. 2's ``m``: the
+        layer's filter count);
+      * ``n_input_vectors`` — SIMD batch for the layer (conv patches x
+        samples; sets the packed word width W).
+
+    Iterable in that order, so legacy ``for stats, m, n_vec in layers``
+    unpacking keeps working; the model-facing entry points also still
+    accept raw tuples (:meth:`from_any`).
+    """
+
+    stats: FfclStats
+    n_copies: int = 1
+    n_input_vectors: int = 1
+
+    def __post_init__(self):
+        if self.n_copies < 1:
+            raise ValueError(f"n_copies must be >= 1, got {self.n_copies}")
+        if self.n_input_vectors < 1:
+            raise ValueError(
+                f"n_input_vectors must be >= 1, got {self.n_input_vectors}")
+
+    def __iter__(self):
+        yield self.stats
+        yield self.n_copies
+        yield self.n_input_vectors
+
+    @staticmethod
+    def from_any(obj) -> "LayerLoad":
+        """Normalize a ``LayerLoad`` or a legacy 3-tuple."""
+        if isinstance(obj, LayerLoad):
+            return obj
+        stats, n_copies, n_vec = obj
+        return LayerLoad(stats=stats, n_copies=int(n_copies),
+                         n_input_vectors=int(n_vec))
+
+
+def normalize_layers(layers) -> list[LayerLoad]:
+    """Tuple-accepting shim for every ``layers`` argument below."""
+    return [LayerLoad.from_any(lw) for lw in layers]
 
 
 def n_subkernels(stats: FfclStats, n_unit: int) -> int:
@@ -335,20 +389,21 @@ class CostModel:
                               m_modules).n_total_pipelined
 
     # -- paper §7.2 eq. 24: whole-network cost ---------------------------
-    def network_cycles(self, layers: list[tuple[FfclStats, int, int]],
-                       n_unit: int, parallel_factor: int = 1) -> float:
-        """layers: list of (stats, n_filters, n_input_vectors).
+    def network_cycles(self, layers: list[LayerLoad], n_unit: int,
+                       parallel_factor: int = 1) -> float:
+        """layers: :class:`LayerLoad` entries (legacy
+        ``(stats, n_copies, n_input_vectors)`` tuples still accepted).
 
-        Within a layer, the n_filters FFCL modules run back-to-back with
+        Within a layer, the n_copies FFCL modules run back-to-back with
         task pipelining (§5.2.3): data movement of filter k+1 overlaps
         compute of filter k, so the layer costs
-        (n_filters + 1) * max(dm, comp)  — eq. 2 with m = n_filters.
+        (n_copies + 1) * max(dm, comp)  — eq. 2 with m = n_copies.
         Layers are sequential (§7.2); parallel compute kernels divide the
         total (eq. 25)."""
         tot = 0.0
-        for stats, n_filters, n_vec in layers:
-            tot += self.total_cycles(stats, n_unit, n_vec,
-                                     m_modules=n_filters)
+        for lw in normalize_layers(layers):
+            tot += self.total_cycles(lw.stats, n_unit, lw.n_input_vectors,
+                                     m_modules=lw.n_copies)
         return tot / parallel_factor
 
     def network_cycles_parallel(self, layers, n_per: int, k: int) -> float:
@@ -358,8 +413,9 @@ class CostModel:
         kernel's dm term stretches by k. Per layer (per kernel, all run
         in parallel):  (ceil(m/k) + 1) * max(k * dm, comp)."""
         tot = 0.0
-        for stats, n_filters, n_vec in layers:
-            b = self.breakdown(stats, n_per, n_vec, m_modules=1)
-            m_k = -(-n_filters // k)
+        for lw in normalize_layers(layers):
+            b = self.breakdown(lw.stats, n_per, lw.n_input_vectors,
+                               m_modules=1)
+            m_k = -(-lw.n_copies // k)
             tot += (m_k + 1) * max(k * b.n_data_moves, b.n_compute)
         return tot

@@ -514,6 +514,17 @@ class PassManager:
         """Graph-only convenience over :meth:`run`."""
         return self.run(graph).graph
 
+    # Two managers with the same configuration identity run the same
+    # rewrites, so they compare (and hash) equal — what makes
+    # ``CompileSpec(optimize="default")`` equal however the default
+    # pipeline was spelled (core/spec.py normalizes on construction).
+    def __eq__(self, other) -> bool:
+        return (isinstance(other, PassManager)
+                and self.cache_key == other.cache_key)
+
+    def __hash__(self) -> int:
+        return hash(self.cache_key)
+
     def __repr__(self) -> str:
         return (f"PassManager({self.name!r}, "
                 f"passes={[p.name for p in self.passes]}, "
@@ -525,7 +536,10 @@ def resolve_pipeline(optimize) -> PassManager | None:
 
     ``"default"`` / ``True`` -> :meth:`PassManager.default`;
     ``"none"`` / ``None`` / ``False`` -> no optimization;
-    a :class:`PassManager` instance passes through unchanged.
+    a :class:`PassManager` instance passes through unchanged;
+    a :class:`~repro.core.spec.CompileSpec` contributes its resolved
+    ``pipeline`` (so graph-stage knobs like ``FfclStats.from_graph
+    (optimized=spec)`` accept the one declarative target directly).
     """
     if optimize is None or optimize is False or optimize == "none":
         return None
@@ -533,6 +547,9 @@ def resolve_pipeline(optimize) -> PassManager | None:
         return PassManager.default()
     if isinstance(optimize, PassManager):
         return optimize
+    from repro.core.spec import CompileSpec   # lazy: spec imports this module
+    if isinstance(optimize, CompileSpec):
+        return optimize.pipeline
     raise ValueError(
-        f"optimize must be 'default', 'none', or a PassManager; "
-        f"got {optimize!r}")
+        f"optimize must be 'default', 'none', a PassManager, or a "
+        f"CompileSpec; got {optimize!r}")

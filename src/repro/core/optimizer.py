@@ -5,12 +5,23 @@ term (fewer sub-kernel steps) but grow the address-stream data-movement term
 (3 addresses per unit per step, and padding waste). Eq. 26 minimizes total
 cycles subject to n_unit <= N_max via binary search; we implement the same
 search (on the discrete derivative) plus an exhaustive sweep for plots.
+
+Network loads are :class:`~repro.core.cost_model.LayerLoad` values (legacy
+``(stats, n_copies, n_input_vectors)`` tuples still accepted).  With the
+:class:`~repro.core.spec.CompileSpec` API this search is no longer a
+separate manual workflow: ``CompileSpec(n_unit="auto")`` routes every
+compile path through :func:`binary_search` via
+:class:`~repro.core.compiler.LogicCompiler`.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
 
-from repro.core.cost_model import CostModel, FfclStats
+from repro.core.cost_model import (CostModel, FfclStats, LayerLoad,
+                                   normalize_layers)
+
+__all__ = ["FfclStats", "LayerLoad", "SearchResult", "sweep",
+           "binary_search"]
 
 
 @dataclass
@@ -20,43 +31,63 @@ class SearchResult:
     evaluations: list[tuple[int, float]]   # (n_unit, cycles) probes, in order
 
 
-def _network_cost(model: CostModel,
-                  layers: list[tuple[FfclStats, int, int]],
+def _network_cost(model: CostModel, layers: list[LayerLoad],
                   n_unit: int, parallel_factor: int = 1) -> float:
     return model.network_cycles(layers, n_unit, parallel_factor)
 
 
-def sweep(model: CostModel, layers: list[tuple[FfclStats, int, int]],
-          n_units: list[int], parallel_factor: int = 1) -> SearchResult:
+def sweep(model: CostModel, layers, n_units: list[int],
+          parallel_factor: int = 1) -> SearchResult:
+    """Exhaustive probe of every candidate unit count (for plots)."""
+    layers = normalize_layers(layers)
+    if not n_units:
+        raise ValueError("sweep needs at least one n_unit candidate")
+    if min(n_units) < 1:
+        raise ValueError(f"n_unit candidates must be >= 1, got {n_units!r}")
     evals = [(u, _network_cost(model, layers, u, parallel_factor))
              for u in n_units]
     best = min(evals, key=lambda t: t[1])
     return SearchResult(best[0], best[1], evals)
 
 
-def binary_search(model: CostModel, layers: list[tuple[FfclStats, int, int]],
-                  n_unit_max: int, parallel_factor: int = 1,
+def binary_search(model: CostModel, layers, n_unit_max: int,
+                  parallel_factor: int = 1,
                   n_unit_min: int = 1) -> SearchResult:
     """Binary search on the sign of the discrete derivative (paper §8.1).
 
     Assumes unimodal latency in n_unit (holds for the model: the compute
     term is ~1/n decreasing + ceil-steps, the address term is increasing).
+
+    Degenerate ranges are handled without probing out of bounds: with
+    ``n_unit_max <= n_unit_min + 2`` the search reduces to enumerating
+    the (at most three) in-range candidates, and every probe — including
+    the final candidate enumeration — lands in
+    ``[n_unit_min, n_unit_max]`` and is recorded once in
+    ``evaluations``.
     """
+    layers = normalize_layers(layers)
+    if n_unit_min < 1:
+        raise ValueError(f"n_unit_min must be >= 1, got {n_unit_min}")
+    if n_unit_max < n_unit_min:
+        raise ValueError(
+            f"empty search range: n_unit_max={n_unit_max} < "
+            f"n_unit_min={n_unit_min}")
     evals: list[tuple[int, float]] = []
+    memo: dict[int, float] = {}
 
     def cost(u: int) -> float:
-        c = _network_cost(model, layers, u, parallel_factor)
-        evals.append((u, c))
-        return c
+        if u not in memo:
+            memo[u] = _network_cost(model, layers, u, parallel_factor)
+            evals.append((u, memo[u]))
+        return memo[u]
 
     lo, hi = n_unit_min, n_unit_max
     while hi - lo > 2:
-        mid = (lo + hi) // 2
+        mid = (lo + hi) // 2               # lo < mid, mid + 1 < hi here
         if cost(mid) <= cost(mid + 1):
             hi = mid + 1       # minimum is at mid or left of it
         else:
             lo = mid + 1
-    cand = {u: _network_cost(model, layers, u, parallel_factor)
-            for u in range(lo, hi + 1)}
+    cand = {u: cost(u) for u in range(lo, hi + 1)}
     best_u = min(cand, key=cand.get)
     return SearchResult(best_u, cand[best_u], evals)

@@ -31,6 +31,7 @@ import numpy as np
 from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, UNARY
 from repro.core.opt import resolve_pipeline
 from repro.core.scheduler import LogicProgram, compile_graph
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 
 
 def output_cones(graph: LogicGraph) -> list[set]:
@@ -94,26 +95,50 @@ def _extract(graph: LogicGraph, out_idx: list[int]) -> LogicGraph:
     return sub
 
 
-def partition(graph: LogicGraph, max_gates: int, *,
-              optimize="none") -> list[Partition]:
+def partition(graph: LogicGraph, max_gates: int | CompileSpec, *,
+              optimize=_UNSET) -> list[Partition]:
     """Greedy cone-overlap clustering under a per-partition gate budget.
 
     Each cluster's gate set is the union of its members' cones; a new
     output joins the cluster where it adds the fewest NEW gates, if the
     union stays <= max_gates; otherwise it seeds a new cluster.
 
-    ``optimize`` (``"default"`` | ``"none"`` | a core/opt.py
-    ``PassManager``) runs the gate-level pass pipeline on each extracted
-    cluster cone: cross-cluster gate duplication re-exposes
+    ``max_gates`` is either the bare budget (an int — partitioning's
+    core argument, not deprecated) or a full
+    :class:`~repro.core.spec.CompileSpec`, whose ``max_gates`` must be
+    set and whose ``optimize`` pipeline runs on each extracted cluster
+    cone: cross-cluster gate duplication re-exposes
     constant/CSE/dead-fanin slack *inside* a cluster that global
     optimization could not see, so per-cluster passes shrink the
     per-program buffer budget the partitioning exists to bound. Budget
     accounting stays on the raw cone sizes (optimization only shrinks a
     cluster, never grows it).
+
+    The loose ``optimize=`` kwarg is the deprecated pre-spec
+    convention (``DeprecationWarning``); pass a spec instead.
     """
+    if isinstance(max_gates, CompileSpec):
+        if optimize is not _UNSET:
+            raise TypeError("partition: pass either a CompileSpec or the "
+                            "legacy optimize= kwarg, not both")
+        spec = max_gates
+        if spec.max_gates is None:
+            raise ValueError(
+                "partition needs a budget: spec.max_gates must be set")
+        max_gates, pipeline = spec.max_gates, spec.pipeline
+    else:
+        import warnings
+        from repro.core.spec import DEPRECATION_PREFIX
+        if optimize is _UNSET:
+            pipeline = None
+        else:
+            warnings.warn(
+                f"{DEPRECATION_PREFIX}: partition(optimize=...) is "
+                "deprecated; pass a CompileSpec as the budget argument",
+                DeprecationWarning, stacklevel=2)
+            pipeline = resolve_pipeline(optimize)
     if graph.n_outputs == 0:
         return []
-    pipeline = resolve_pipeline(optimize)
     cones = output_cones(graph)
     order = np.argsort([-len(c) for c in cones], kind="stable")
     clusters: list[tuple[set, list]] = []   # (gate union, output indices)
@@ -140,10 +165,21 @@ def partition(graph: LogicGraph, max_gates: int, *,
     return parts
 
 
-def compile_partitions(parts: list[Partition], n_unit: int,
-                       alloc: str = "liveness") -> list[LogicProgram]:
-    return [compile_graph(p.graph, n_unit=n_unit, alloc=alloc)
-            for p in parts]
+def compile_partitions(parts: list[Partition],
+                       spec: CompileSpec | int | None = None, *,
+                       n_unit=_UNSET, alloc=_UNSET) -> list[LogicProgram]:
+    """Schedule every sub-FFCL per ``spec``'s fabric/layout knobs.
+
+    The optimize stage is stripped (``optimize="none"``): ``partition``
+    already ran the pipeline per cluster, so re-running it here would be
+    pure waste — and the pre-spec behaviour compiled parts raw, which
+    this preserves exactly.  ``max_gates`` is likewise moot (the parts
+    ARE the budget's product).  Legacy ``n_unit``/``alloc`` kwargs warn.
+    """
+    spec = resolve_spec(spec, caller="compile_partitions",
+                        n_unit=n_unit, alloc=alloc)
+    mono = spec.with_(optimize="none", max_gates=None)
+    return [compile_graph(p.graph, mono) for p in parts]
 
 
 def output_permutation(parts: list[Partition], n_outputs: int) -> np.ndarray:

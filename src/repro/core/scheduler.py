@@ -53,7 +53,7 @@ import numpy as np
 from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, MIXED_DISPATCH,
                                 OpCode, apply_op)
 from repro.core.levelize import Levelization, levelize
-from repro.core.opt import resolve_pipeline as _resolve_pipeline
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.core import packing
 
 
@@ -214,33 +214,57 @@ def _layout_steps(graph: LogicGraph, lv: Levelization, n_unit: int,
     return order, counts, np.asarray(level_tag, dtype=np.int64)
 
 
-def compile_graph(graph: LogicGraph, n_unit: int,
-                  alloc: str = "direct",
+def compile_graph(graph: LogicGraph, spec: CompileSpec | int | None = None,
                   lv: Levelization | None = None, *,
-                  opcode_sort: bool = True,
-                  fuse_levels: bool = True,
-                  optimize="none") -> LogicProgram:
-    """Schedule ``graph`` onto ``n_unit`` time-shared compute units.
+                  n_unit=_UNSET, alloc=_UNSET, opcode_sort=_UNSET,
+                  fuse_levels=_UNSET, optimize=_UNSET) -> LogicProgram:
+    """Schedule ``graph`` onto the fabric described by ``spec``.
 
-    ``opcode_sort`` groups each level's gates by opcode so steps are
-    opcode-homogeneous (one slab op in the kernels); ``fuse_levels`` lets
-    gates back-fill spare unit slots of earlier steps, shrinking
-    ``n_steps`` below the eq. 23 count (see DESIGN.md §1). Both default on;
-    disable ``fuse_levels`` to reproduce the paper-exact eq. 23 layout.
+    ``spec`` is the one declarative compilation target
+    (:class:`~repro.core.spec.CompileSpec`; canonical defaults when
+    omitted).  The scheduling knobs it carries:
 
-    ``optimize`` runs a gate-level optimization pipeline (core/opt.py)
-    before levelization: ``"default"`` for :meth:`PassManager.default`,
-    ``"none"`` (the default: a hand-built graph schedules exactly as
-    written, preserving the paper-exact eq. 23 contract), or any
-    :class:`~repro.core.opt.PassManager`. The program's I/O interface is
-    unchanged — passes never touch primary inputs or output ordering —
-    but ``n_gates``/``n_steps``/``depth`` reflect the optimized graph.
+      * ``spec.opcode_sort`` groups each level's gates by opcode so
+        steps are opcode-homogeneous (one slab op in the kernels);
+      * ``spec.fuse_levels`` lets gates back-fill spare unit slots of
+        earlier steps, shrinking ``n_steps`` below the eq. 23 count
+        (DESIGN.md §1) — ``CompileSpec.paper_exact()`` turns both off;
+      * ``spec.optimize`` runs the gate-level pass pipeline
+        (core/opt.py) before levelization.  The program's I/O interface
+        is unchanged — passes never touch primary inputs or output
+        ordering — but ``n_gates``/``n_steps``/``depth`` reflect the
+        optimized graph.
+
+    This is the *monolithic* primitive: ``spec.max_gates`` is ignored
+    here (budget-aware compilation — partitioning plus the output
+    permutation — lives in :class:`~repro.core.compiler.LogicCompiler`),
+    and ``spec.n_unit`` must be concrete (``"auto"`` resolution needs
+    the facade's cost-model context).
+
+    The loose ``n_unit``/``alloc``/``opcode_sort``/``fuse_levels``/
+    ``optimize`` kwargs (and a bare int ``spec``) are the deprecated
+    pre-spec convention — they still work, with a ``DeprecationWarning``
+    and the canonical defaults for anything unspecified.
     """
-    if n_unit < 1:
-        raise ValueError("n_unit must be >= 1")
-    if alloc not in ("direct", "liveness"):
-        raise ValueError(f"unknown alloc strategy {alloc!r}")
-    pipeline = _resolve_pipeline(optimize)
+    spec = resolve_spec(spec, caller="compile_graph", n_unit=n_unit,
+                        alloc=alloc, opcode_sort=opcode_sort,
+                        fuse_levels=fuse_levels, optimize=optimize)
+    if lv is not None and not isinstance(lv, Levelization):
+        # the pre-spec signature took alloc as the 3rd positional; a stale
+        # compile_graph(g, 16, "direct") call would otherwise silently
+        # bind the string to lv and compile with the wrong allocator
+        raise TypeError(
+            f"compile_graph's third parameter is a Levelization, got "
+            f"{lv!r}; the old positional alloc argument moved onto the "
+            f"spec — pass CompileSpec(alloc=...)")
+    if not spec.resolved:
+        raise ValueError(
+            "compile_graph needs a concrete n_unit; resolve "
+            "n_unit='auto' through LogicCompiler (core/compiler.py) or "
+            "the serving registry first")
+    n_unit, alloc = spec.n_unit, spec.alloc
+    opcode_sort, fuse_levels = spec.opcode_sort, spec.fuse_levels
+    pipeline = spec.pipeline
     if pipeline is not None:
         graph = pipeline.run(graph).graph
         lv = None                      # levelization refers to the old graph

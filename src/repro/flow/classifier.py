@@ -37,6 +37,7 @@ import numpy as np
 
 from repro.core.gate_ir import LogicGraph, compose_graphs
 from repro.core.simulator import SimResult, simulate_pipeline
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.flow.convert import CompiledLayer, convert_layer
 from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
                                          program_arrays, unpack_bits_jnp)
@@ -75,17 +76,33 @@ def hard_forward(params: dict, bits: np.ndarray, n_layers: int
 
 @dataclass
 class LogicClassifier:
-    """Hidden layers as compiled FFCL programs + numeric argmax head."""
+    """Hidden layers as compiled FFCL programs + numeric argmax head.
+
+    ``spec`` is the :class:`~repro.core.spec.CompileSpec` the layers
+    were converted against — the single compilation-target record the
+    engine backend, reports, and benchmarks read (``n_unit``/``alloc``/
+    ``optimize`` remain as read-only views).
+    """
 
     layers: tuple[CompiledLayer, ...]
     w_out: np.ndarray
     b_out: np.ndarray
-    n_unit: int
-    alloc: str
-    optimize: object = "default"     # the core/opt.py knob the layers used
+    spec: CompileSpec = field(default_factory=CompileSpec)
     _stacked: LogicGraph | None = field(default=None, repr=False)
     _runners: dict = field(default_factory=dict, repr=False)
     _engine: object = field(default=None, repr=False)
+
+    @property
+    def n_unit(self):
+        return self.spec.n_unit
+
+    @property
+    def alloc(self) -> str:
+        return self.spec.alloc
+
+    @property
+    def optimize(self):
+        return self.spec.optimize
 
     @property
     def n_features(self) -> int:
@@ -131,15 +148,17 @@ class LogicClassifier:
         return self._runners[backend]
 
     def _serve_engine(self):
-        """Default unpartitioned engine; callers wanting a partition budget
-        or shared cache pass their own engine to :meth:`hidden_bits`. It
-        inherits the classifier's ``optimize`` setting so an
-        ``optimize="none"`` build really serves the raw netlist on the
-        engine backend too (the A/B contract)."""
+        """Default engine over the classifier's FULL spec — including
+        ``max_gates``, which partitions the composed hidden stack into a
+        pipelined program sequence (the budget is moot for the per-layer
+        programs but binds here, exactly as ``build_classifier``
+        documents) — so an ``optimize="none"`` build really serves the
+        raw netlist on the engine backend too (the A/B contract).
+        Callers wanting a shared cache or different serving config pass
+        their own engine to :meth:`hidden_bits`."""
         if self._engine is None:
             from repro.serve import LogicEngine
-            self._engine = LogicEngine(n_unit=self.n_unit, alloc=self.alloc,
-                                       capacity=256, optimize=self.optimize)
+            self._engine = LogicEngine(self.spec, capacity=256)
         return self._engine
 
     def hidden_bits(self, bits: np.ndarray, backend: str = "reference",
@@ -185,27 +204,32 @@ class LogicClassifier:
 
 
 def build_classifier(params: dict, n_layers: int, calib_x: np.ndarray,
-                     *, mode: str = "auto", n_unit: int = 64,
-                     alloc: str = "liveness",
-                     optimize="default") -> LogicClassifier:
+                     spec: CompileSpec | None = None, *, mode: str = "auto",
+                     n_unit=_UNSET, alloc=_UNSET,
+                     optimize=_UNSET) -> LogicClassifier:
     """Convert a trained binarized MLP's hidden stack (all layers).
 
     Calibration activations come from :func:`hard_forward` on the
     calibration set, so ISF care-sets are sampled from exactly the
-    function the logic must reproduce. ``optimize`` is the per-layer
-    gate-level pass pipeline (core/opt.py; semantics-preserving, so
-    parity holds either way — ``"none"`` keeps raw synthesis output for
-    A/B benchmarking).
+    function the logic must reproduce.  ``spec`` is the one declarative
+    compilation target every layer is converted against
+    (``spec.optimize`` is semantics-preserving, so parity holds either
+    way — ``"none"`` keeps raw synthesis output for A/B benchmarking;
+    ``spec.max_gates`` rides along to the engine backend, which serves
+    the composed stack as a pipelined program sequence).  Loose
+    ``n_unit``/``alloc``/``optimize`` kwargs are the deprecated
+    pre-spec convention.
     """
+    spec = resolve_spec(spec, caller="build_classifier", n_unit=n_unit,
+                        alloc=alloc, optimize=optimize)
     bits = input_bits(calib_x).astype(np.uint8)
     acts, _ = hard_forward(params, bits, n_layers)
     layers = tuple(
         convert_layer(params[f"w{i}"], params[f"b{i}"], acts[i],
-                      n_unit=n_unit, mode=mode, alloc=alloc,
-                      name=f"layer{i}", optimize=optimize)
+                      spec, mode=mode, name=f"layer{i}")
         for i in range(n_layers - 1))
     return LogicClassifier(
         layers=layers,
         w_out=np.asarray(params[f"w{n_layers - 1}"]),
         b_out=np.asarray(params[f"b{n_layers - 1}"]),
-        n_unit=n_unit, alloc=alloc, optimize=optimize)
+        spec=spec)

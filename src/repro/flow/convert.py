@@ -22,9 +22,11 @@ from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.compiler import LogicCompiler
 from repro.core.gate_ir import LogicGraph
 from repro.core.nullanet import layer_to_graph
 from repro.core.scheduler import LogicProgram, compile_graph
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 
 
 @dataclass(frozen=True)
@@ -73,26 +75,40 @@ def layer_graph(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
 
 
 def convert_layer(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
-                  *, n_unit: int, mode: str = "auto",
-                  alloc: str = "liveness", name: str = "layer",
-                  opcode_sort: bool = True, fuse_levels: bool = True,
-                  optimize="default") -> CompiledLayer:
+                  spec: CompileSpec | None = None, *, mode: str = "auto",
+                  name: str = "layer", n_unit=_UNSET, alloc=_UNSET,
+                  opcode_sort=_UNSET, fuse_levels=_UNSET,
+                  optimize=_UNSET) -> CompiledLayer:
     """NullaNet-convert one binarized layer (:func:`layer_graph`) and
-    compile it (``n_unit``/``alloc``/``opcode_sort``/``fuse_levels`` are
-    the core/scheduler.py knobs; ``optimize`` the core/opt.py pipeline —
-    applied once, at the graph stage, so the retained ``graph`` and the
-    compiled ``program`` describe the same optimized netlist)."""
+    compile it against ``spec`` (the one declarative target,
+    core/spec.py; canonical defaults when omitted).
+
+    ``spec.optimize`` is applied once, at the graph stage, so the
+    retained ``graph`` and the compiled ``program`` describe the same
+    optimized netlist; ``spec.n_unit="auto"`` resolves per layer via the
+    design-space search (core/compiler.py); ``spec.max_gates`` is moot
+    here (one layer compiles monolithically — budget-aware serving
+    partitions the composed stack instead).  Loose ``n_unit``/``alloc``/
+    ``opcode_sort``/``fuse_levels``/``optimize`` kwargs are the
+    deprecated pre-spec convention.
+    """
+    spec = resolve_spec(spec, caller="convert_layer", n_unit=n_unit,
+                        alloc=alloc, opcode_sort=opcode_sort,
+                        fuse_levels=fuse_levels, optimize=optimize)
     graph = layer_graph(W, b, calib_bits, mode=mode, name=name,
-                        optimize=optimize)
-    program = compile_graph(graph, n_unit=n_unit, alloc=alloc,
-                            opcode_sort=opcode_sort, fuse_levels=fuse_levels)
+                        optimize=spec.optimize)
+    spec, _ = LogicCompiler().resolve(graph, spec, assume_optimized=True)
+    program = compile_graph(graph, spec.with_(optimize="none",
+                                              max_gates=None))
     return CompiledLayer(graph=graph, program=program)
 
 
 def layer_to_program(W: np.ndarray, b: np.ndarray, calib_bits: np.ndarray,
-                     *, n_unit: int, mode: str = "auto",
-                     alloc: str = "liveness", name: str = "layer",
-                     optimize="default") -> LogicProgram:
+                     spec: CompileSpec | None = None, *, mode: str = "auto",
+                     name: str = "layer", n_unit=_UNSET, alloc=_UNSET,
+                     optimize=_UNSET) -> LogicProgram:
     """Program-only convenience over :func:`convert_layer`."""
-    return convert_layer(W, b, calib_bits, n_unit=n_unit, mode=mode,
-                         alloc=alloc, name=name, optimize=optimize).program
+    spec = resolve_spec(spec, caller="layer_to_program", n_unit=n_unit,
+                        alloc=alloc, optimize=optimize)
+    return convert_layer(W, b, calib_bits, spec, mode=mode,
+                         name=name).program

@@ -33,15 +33,29 @@ import numpy as np
 
 from repro.core.nullanet import (BinaryMLPConfig, ENUM_LIMIT, mlp_accuracy,
                                  train_binary_mlp)
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.data.synthetic import make_binary_classification, train_val_split
 from repro.flow.classifier import (BACKENDS, LogicClassifier, hard_forward,
                                    input_bits, build_classifier)
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, init=False)
 class FlowConfig:
     """One end-to-end run. Defaults keep every layer under ``ENUM_LIMIT``
-    fanin so the conversion is exact and parity is provable."""
+    fanin so the conversion is exact and parity is provable.
+
+    ``spec`` is the one declarative compilation target
+    (:class:`~repro.core.spec.CompileSpec`) the whole run compiles and
+    serves against — per-layer conversion AND the engine backend
+    (``spec.max_gates`` is the engine's partition budget; per-layer
+    programs stay monolithic).  The loose ``n_unit``/``alloc``/
+    ``optimize``/``max_gates`` constructor arguments are the deprecated
+    pre-spec convention (still accepted, with a ``DeprecationWarning``);
+    ``cfg.n_unit`` etc. remain readable as views on the spec.  The
+    ``__init__`` is hand-written (not dataclass-generated) so
+    ``dataclasses.replace(cfg, spec=...)`` keeps working — the legacy
+    arguments are not fields.
+    """
 
     n_features: int = 12
     hidden: tuple[int, ...] = (10, 8)
@@ -50,13 +64,28 @@ class FlowConfig:
     val_frac: float = 0.25
     noise: float = 0.05
     train_steps: int = 300
-    n_unit: int = 32
-    alloc: str = "liveness"
+    spec: CompileSpec | None = None
     mode: str = "auto"
-    optimize: str = "default"        # core/opt.py pipeline ("none" = raw)
-    max_gates: int | None = None     # engine partition budget (None = mono)
     seed: int = 0
     backends: tuple[str, ...] = BACKENDS
+
+    def __init__(self, n_features: int = 12, hidden: tuple = (10, 8),
+                 n_classes: int = 4, n_samples: int = 4000,
+                 val_frac: float = 0.25, noise: float = 0.05,
+                 train_steps: int = 300, spec: CompileSpec | None = None,
+                 mode: str = "auto", seed: int = 0,
+                 backends: tuple = BACKENDS, *, n_unit=_UNSET, alloc=_UNSET,
+                 optimize=_UNSET, max_gates=_UNSET):
+        spec = resolve_spec(spec, caller="FlowConfig", n_unit=n_unit,
+                            alloc=alloc, optimize=optimize,
+                            max_gates=max_gates)
+        for name, val in (("n_features", n_features), ("hidden", hidden),
+                          ("n_classes", n_classes), ("n_samples", n_samples),
+                          ("val_frac", val_frac), ("noise", noise),
+                          ("train_steps", train_steps), ("spec", spec),
+                          ("mode", mode), ("seed", seed),
+                          ("backends", backends)):
+            object.__setattr__(self, name, val)
 
     @property
     def exact(self) -> bool:
@@ -75,6 +104,16 @@ class FlowConfig:
             self.n_samples, self.n_features, n_classes=self.n_classes,
             noise=self.noise, seed=self.seed)
         return train_val_split(x, y, val_frac=self.val_frac, seed=self.seed)
+
+
+# Read-only views on the spec under the pre-spec attribute names
+# (``cfg.n_unit`` etc.).  Attached after decoration because the names
+# double as the deprecated InitVar constructor arguments above — a
+# property in the class body would shadow the InitVar defaults.
+for _knob in ("n_unit", "alloc", "optimize", "max_gates"):
+    setattr(FlowConfig, _knob,
+            property(lambda self, _k=_knob: getattr(self.spec, _k)))
+del _knob
 
 
 @dataclass
@@ -147,17 +186,13 @@ def run_flow(cfg: FlowConfig = FlowConfig(), log_every: int = 0
     binarized_acc = float((np.argmax(logits, -1) == yv).mean())
 
     t0 = time.perf_counter()
-    clf = build_classifier(params_np, n_layers, xt, mode=cfg.mode,
-                           n_unit=cfg.n_unit, alloc=cfg.alloc,
-                           optimize=cfg.optimize)
+    clf = build_classifier(params_np, n_layers, xt, cfg.spec, mode=cfg.mode)
     convert_s = time.perf_counter() - t0
 
     engine = None
     if "engine" in cfg.backends:
         from repro.serve import LogicEngine
-        engine = LogicEngine(n_unit=cfg.n_unit, alloc=cfg.alloc,
-                             capacity=256, max_gates=cfg.max_gates,
-                             optimize=cfg.optimize)
+        engine = LogicEngine(cfg.spec, capacity=256)
 
     logic_acc: dict[str, float] = {}
     eval_s: dict[str, float] = {}

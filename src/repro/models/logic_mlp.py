@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.scheduler import LogicProgram
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.flow.convert import layer_to_program
 from repro.kernels.logic_dsp.ops import (logic_forward, pack_bits_jnp,
                                          unpack_bits_jnp)
@@ -43,19 +44,23 @@ def binary_ffn(p: dict, x: jnp.ndarray) -> jnp.ndarray:
     return ((2.0 * h - 1.0) @ p["w_out"].astype(jnp.float32)).astype(x.dtype)
 
 
-def ffn_to_program(p: dict, calib_bits: np.ndarray, n_unit: int = 64,
-                   mode: str = "isf", name: str = "ffn",
-                   optimize="default") -> LogicProgram:
+def ffn_to_program(p: dict, calib_bits: np.ndarray,
+                   spec: CompileSpec | int | None = None,
+                   mode: str = "isf", name: str = "ffn", *,
+                   n_unit=_UNSET, optimize=_UNSET) -> LogicProgram:
     """NullaNet conversion of the xb -> h map of one FFN layer.
 
     Thin wrapper over :func:`repro.flow.convert.layer_to_program` — the
-    single conversion code path of the repo (``optimize`` is its
-    core/opt.py pass-pipeline knob).
+    single conversion code path of the repo.  ``spec`` is the one
+    declarative compilation target (core/spec.py); the loose
+    ``n_unit``/``optimize`` kwargs (or an int third positional, the old
+    ``n_unit``) are the deprecated pre-spec convention.
     """
+    spec = resolve_spec(spec, caller="ffn_to_program", n_unit=n_unit,
+                        optimize=optimize)
     return layer_to_program(p["w_in"], p["b_in"],
                             np.asarray(calib_bits, dtype=np.uint8),
-                            n_unit=n_unit, mode=mode, alloc="liveness",
-                            name=name, optimize=optimize)
+                            spec, mode=mode, name=name)
 
 
 def logic_ffn_apply(prog: LogicProgram, p: dict, x: jnp.ndarray

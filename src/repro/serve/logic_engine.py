@@ -6,10 +6,12 @@ artifact (ROADMAP north star; paper §5.2.4 host-side queueing and the §2
 "inference engine for ANY network" claim). Three layers:
 
 1. **Program registry** (:class:`ProgramCache`) — compiled programs plus
-   their device arrays, keyed by ``(graph fingerprint, n_unit, alloc,
-   max_gates)``. Repeat traffic for a structurally identical FFCL never
+   their device arrays, keyed by ``(graph fingerprint,
+   CompileSpec.cache_key())`` — the one declarative compilation target
+   (core/spec.py). Repeat traffic for a structurally identical FFCL never
    recompiles and never re-uploads streams; LRU-evicted entries drop their
-   jit runners with them.
+   jit runners with them. Misses compile through the one
+   :class:`~repro.core.compiler.LogicCompiler` facade.
 
 2. **Slot/word batching** (:class:`LogicEngine` + ``batcher.SlotTable``) —
    incoming bit-vector requests are packed into the sample rows of one
@@ -36,7 +38,6 @@ fixed-shape invocation at maximum word occupancy.
 """
 from __future__ import annotations
 
-import time
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable
@@ -47,12 +48,11 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
+from repro.core.compiler import CompiledArtifact, LogicCompiler
 from repro.core.gate_ir import LogicGraph
-from repro.core.opt import PassManager, resolve_pipeline
 from repro.core.packing import WORD_BITS
-from repro.core.partition import (compile_partitions, output_permutation,
-                                  partition)
-from repro.core.scheduler import LogicProgram, compile_graph
+from repro.core.scheduler import LogicProgram
+from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.kernels.logic_dsp import kernel as _k
 from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
                                          program_arrays, unpack_bits_jnp)
@@ -64,53 +64,98 @@ from repro.train.sharding import batch_pspec
 # program registry
 # ---------------------------------------------------------------------------
 
+def _resolve_cache_spec(spec, alloc, max_gates, n_unit, pipeline, *,
+                        caller: str) -> CompileSpec:
+    """The registry's deprecation shim: the pre-spec convention was
+    ``(graph, n_unit, alloc, max_gates, pipeline=...)`` with ``alloc``/
+    ``max_gates`` positional and the pass pipeline under the ``pipeline``
+    name (``None`` = raw) — normalize all of that onto the spec's
+    ``optimize`` field before handing to :func:`resolve_spec`."""
+    optimize = _UNSET
+    if pipeline is not _UNSET:
+        optimize = "none" if pipeline is None else pipeline
+    return resolve_spec(spec, caller=caller, stacklevel=4, n_unit=n_unit,
+                        alloc=alloc, max_gates=max_gates, optimize=optimize)
+
+
 @dataclass
 class CompiledEntry:
-    """One registry entry: the compiled program pipeline for a graph."""
+    """One registry entry: a :class:`CompiledArtifact` plus its runners.
+
+    The artifact is the facade's one result type (resolved spec,
+    post-optimization graph, program pipeline, output permutation); the
+    entry adds the registry key and the lazily-attached fused jit
+    runners, keyed by engine execution config (mesh/shard/backend/
+    capacity) so engines sharing a cache never run another engine's
+    trace — evicted with the entry.
+    """
 
     key: tuple
-    programs: tuple[LogicProgram, ...]
-    output_perm: np.ndarray        # concat(part outputs)[perm] == original
-    n_inputs: int
-    n_outputs: int
-    # fused jit runners, attached lazily, keyed by engine execution config
-    # (mesh/shard/backend/capacity) so engines sharing a cache never run
-    # another engine's trace; evicted with the entry.
+    artifact: CompiledArtifact
     runners: dict = field(default_factory=dict)
-    compile_s: float = 0.0
+
+    @property
+    def spec(self) -> CompileSpec:
+        return self.artifact.spec
+
+    @property
+    def programs(self) -> tuple[LogicProgram, ...]:
+        return self.artifact.programs
+
+    @property
+    def output_perm(self) -> np.ndarray:
+        return self.artifact.output_perm
+
+    @property
+    def n_inputs(self) -> int:
+        return self.artifact.n_inputs
+
+    @property
+    def n_outputs(self) -> int:
+        return self.artifact.n_outputs
+
+    @property
+    def compile_s(self) -> float:
+        return self.artifact.compile_s
 
     @property
     def partitioned(self) -> bool:
-        return len(self.programs) > 1
+        return self.artifact.partitioned
 
 
 class ProgramCache:
     """LRU registry of compiled logic programs.
 
-    Keying contract (documented in DESIGN.md §5/§7): the key is
-    ``(fingerprint, n_unit, alloc, max_gates)`` where the fingerprint is
-    taken **after** gate-level optimization when a pass pipeline is in
-    play —
+    Keying contract (documented in DESIGN.md §5/§8): the key is
+    ``(fingerprint, spec.cache_key())`` — the graph's structural
+    identity plus the one canonical :meth:`CompileSpec.cache_key`
+    (which replaced the registry's hand-built tuple), taken with
+    ``optimize`` stripped to ``"none"`` since the pipeline's whole
+    effect is absorbed into the fingerprint — where the fingerprint is
+    taken **after** gate-level optimization when the spec carries a
+    pass pipeline:
 
       * ``fingerprint()`` hashes inputs/gates/outputs but NOT the name, so
         structurally identical graphs from different producers share one
         compiled program;
-      * with a ``pipeline`` (core/opt.py), the key uses the
+      * with ``spec.optimize`` active, the key uses the
         *post-optimization* fingerprint: two raw graphs that rewrite to
         the same optimized netlist — e.g. the same NullaNet layer
         synthesized by two workers with different dead fanin — hit ONE
         cache entry instead of compiling twice;
-      * ``n_unit``/``alloc`` change the emitted streams and the buffer
-        layout, so each fabric configuration caches separately;
-      * ``max_gates`` (the partition budget, None = monolithic) changes the
-        program *pipeline*, so partitioned and monolithic compilations of
-        the same graph coexist.
+      * the spec key is normalized per graph (:meth:`CompileSpec
+        .normalize`): an unbinding partition budget keys as ``None``,
+        and ``n_unit="auto"`` is resolved to its ``binary_search`` pick
+        before keying, so a key always names one concrete program
+        pipeline.
 
     Optimization itself is memoized per ``(raw fingerprint,
-    pipeline.cache_key)``, so the serving hot path stays O(1) per repeat
+    spec.optimize_key)``, so the serving hot path stays O(1) per repeat
     request: the raw fingerprint is memoized on the graph object, the
     optimized graph on the cache — the pass pipeline runs once per
-    distinct raw structure, not once per request.
+    distinct raw structure, not once per request.  Compilation on a
+    miss goes through the one :class:`~repro.core.compiler
+    .LogicCompiler` facade (no private compile path anymore).
 
     Device arrays ride along for free: ``program_arrays`` memoizes on the
     (immutable) program object, and each engine attaches its fused jit
@@ -120,14 +165,22 @@ class ProgramCache:
     together.
     """
 
-    def __init__(self, max_entries: int | None = None):
+    def __init__(self, max_entries: int | None = None,
+                 compiler: LogicCompiler | None = None):
         self.max_entries = max_entries
+        self.compiler = compiler or LogicCompiler()
         self._entries: OrderedDict[tuple, CompiledEntry] = OrderedDict()
-        # (raw fingerprint, pipeline.cache_key) -> optimized LogicGraph;
+        # (raw fingerprint, spec.optimize_key) -> optimized LogicGraph;
         # LRU-bounded looser than the entries (graphs are cheap next to
         # compiled programs + device arrays, and a memo hit is what keeps
         # re-admitted evictees from re-running the pass pipeline).
         self._opt_memo: OrderedDict[tuple, LogicGraph] = OrderedDict()
+        # post-opt fingerprint -> resolved n_unit for n_unit="auto"
+        # specs: the design-space search (levelize + binary_search
+        # probes) must run once per distinct structure, not once per
+        # request — the hot path stays O(1) per repeat.  The cache's
+        # single compiler fixes the remaining search inputs.
+        self._auto_memo: OrderedDict[object, int] = OrderedDict()
         self.hits = 0
         self.misses = 0
 
@@ -135,12 +188,12 @@ class ProgramCache:
     def _opt_memo_bound(self) -> int | None:
         return None if self.max_entries is None else 8 * self.max_entries
 
-    def _optimized(self, graph: LogicGraph,
-                   pipeline: PassManager | None) -> LogicGraph:
+    def _optimized(self, graph: LogicGraph, spec: CompileSpec) -> LogicGraph:
         """The graph the registry compiles and keys on (memoized)."""
+        pipeline = spec.pipeline
         if pipeline is None:
             return graph
-        memo_key = (graph.fingerprint(), pipeline.cache_key)
+        memo_key = (graph.fingerprint(), spec.optimize_key)
         cached = self._opt_memo.get(memo_key)
         if cached is not None:
             self._opt_memo.move_to_end(memo_key)
@@ -160,61 +213,92 @@ class ProgramCache:
         return key in self._entries
 
     @staticmethod
-    def key_of(graph: LogicGraph, n_unit: int, alloc: str,
-               max_gates: int | None) -> tuple:
-        """Registry key for ``graph`` — pass the graph the registry will
-        actually compile (i.e. the *post-optimization* graph when a
-        pipeline is in play; :meth:`get` handles that internally)."""
-        # a budget the graph fits under compiles the identical monolithic
-        # program as no budget at all — normalize so engines with different
-        # (unbinding) budgets share one entry instead of duplicating it
-        if max_gates is not None and graph.n_gates <= max_gates:
-            max_gates = None
-        return (graph.fingerprint(), n_unit, alloc, max_gates)
+    def key_of(graph: LogicGraph, spec: CompileSpec | int | None = None,
+               alloc=_UNSET, max_gates=_UNSET, *, n_unit=_UNSET,
+               pipeline=_UNSET) -> tuple:
+        """Registry key for ``(graph, spec)`` — pass the graph the
+        registry will actually compile (i.e. the *post-optimization*
+        graph when the spec carries a pipeline; :meth:`get` handles that
+        internally) and a spec with a concrete ``n_unit``.
+
+        The spec side is ``cache_key()`` with ``optimize`` stripped: the
+        pipeline's entire effect is absorbed into the post-optimization
+        fingerprint, so a ``optimize="default"`` engine submitting a raw
+        graph and an ``optimize="none"`` engine submitting the already-
+        optimized netlist land on ONE entry (sharing programs, device
+        arrays, and runners) instead of compiling the byte-identical
+        program twice."""
+        spec = _resolve_cache_spec(spec, alloc, max_gates, n_unit, pipeline,
+                                   caller="ProgramCache.key_of")
+        return (graph.fingerprint(),
+                spec.normalize(graph).with_(optimize="none").cache_key())
 
     def peek(self, key: tuple) -> CompiledEntry | None:
         """Entry for ``key`` without compiling, counting, or LRU-touching."""
         return self._entries.get(key)
 
-    def get(self, graph: LogicGraph, n_unit: int, alloc: str = "liveness",
-            max_gates: int | None = None,
-            pipeline: PassManager | None = None) -> CompiledEntry:
-        """Return (compiling on miss) the program pipeline for ``graph``.
+    def get(self, graph: LogicGraph, spec: CompileSpec | int | None = None,
+            alloc=_UNSET, max_gates=_UNSET, *, n_unit=_UNSET,
+            pipeline=_UNSET) -> CompiledEntry:
+        """Return (compiling on miss) the program pipeline for
+        ``(graph, spec)``.
 
-        With a ``pipeline`` the graph is optimized first (memoized) and
-        the entry is keyed on the optimized structure; budget
-        normalization and partitioning then see post-optimization gate
-        counts — a graph whose optimized form fits ``max_gates`` serves
-        monolithically even when its raw form would have split.
+        The graph is optimized per ``spec.optimize`` first (memoized)
+        and the entry is keyed on the optimized structure; budget
+        normalization, ``n_unit="auto"`` resolution, and partitioning
+        then see post-optimization gate counts — a graph whose
+        optimized form fits ``spec.max_gates`` serves monolithically
+        even when its raw form would have split.  Loose ``n_unit``/
+        ``alloc``/``max_gates``/``pipeline`` arguments are the
+        deprecated pre-spec convention.
         """
-        graph = self._optimized(graph, pipeline)
-        key = self.key_of(graph, n_unit, alloc, max_gates)
+        spec = _resolve_cache_spec(spec, alloc, max_gates, n_unit, pipeline,
+                                   caller="ProgramCache.get")
+        graph = self._optimized(graph, spec)
+        spec = self._resolved(graph, spec)
+        # normalize BEFORE compiling so the artifact's recorded spec is
+        # exactly what the key names (an unbinding budget keys — and
+        # records — as None; optimize strips to "none" because its whole
+        # effect lives in the post-optimization fingerprint — see
+        # :meth:`key_of` — and ``assume_optimized`` below means the
+        # facade never re-runs it anyway)
+        spec = spec.normalize(graph).with_(optimize="none")
+        key = (graph.fingerprint(), spec.cache_key())
         entry = self._entries.get(key)
         if entry is not None:
             self.hits += 1
             self._entries.move_to_end(key)
             return entry
         self.misses += 1
-        t0 = time.perf_counter()
-        if max_gates is not None and graph.n_gates > max_gates:
-            # per-cluster re-optimization: extraction re-exposes slack
-            # inside duplicated cones that global passes could not see
-            parts = partition(graph, max_gates=max_gates,
-                              optimize=pipeline)
-            programs = tuple(compile_partitions(parts, n_unit, alloc=alloc))
-            perm = output_permutation(parts, graph.n_outputs)
-        else:
-            programs = (compile_graph(graph, n_unit=n_unit, alloc=alloc),)
-            perm = np.arange(graph.n_outputs, dtype=np.int64)
-        entry = CompiledEntry(
-            key=key, programs=programs, output_perm=perm,
-            n_inputs=graph.n_inputs, n_outputs=graph.n_outputs,
-            compile_s=time.perf_counter() - t0)
+        artifact = self.compiler.compile(graph, spec, assume_optimized=True)
+        entry = CompiledEntry(key=key, artifact=artifact)
         self._entries[key] = entry
         if self.max_entries is not None:
             while len(self._entries) > self.max_entries:
                 self._entries.popitem(last=False)
         return entry
+
+    def _resolved(self, graph: LogicGraph, spec: CompileSpec) -> CompileSpec:
+        """Resolve ``n_unit="auto"`` for ``graph`` (memoized): repeat
+        requests must not re-run the design-space search."""
+        if spec.resolved:
+            return spec
+        # the search depends only on the (post-opt) graph stats and the
+        # cache's one compiler, so the structure alone keys the memo
+        memo_key = graph.fingerprint()
+        n_unit = self._auto_memo.get(memo_key)
+        if n_unit is None:
+            resolved, _ = self.compiler.resolve(graph, spec,
+                                                assume_optimized=True)
+            n_unit = resolved.n_unit
+            self._auto_memo[memo_key] = n_unit
+            bound = self._opt_memo_bound
+            if bound is not None:
+                while len(self._auto_memo) > bound:
+                    self._auto_memo.popitem(last=False)
+        else:
+            self._auto_memo.move_to_end(memo_key)
+        return spec.with_(n_unit=n_unit)
 
     def stats(self) -> dict:
         return {"entries": len(self._entries), "hits": self.hits,
@@ -265,14 +349,23 @@ class LogicEngine:
     """Continuous-batching inference engine over compiled logic programs.
 
     Args:
-      n_unit: compute units the programs are compiled for.
-      alloc: address allocation strategy (see core/scheduler.py).
+      spec: the :class:`~repro.core.spec.CompileSpec` every submitted
+        graph is compiled against (canonical defaults when omitted):
+        fabric width (``n_unit``; ``"auto"`` resolves per graph via the
+        registry's design-space search), address allocation, scheduler
+        layout knobs, the gate-level pass pipeline (submitted graphs
+        are optimized — memoized per raw fingerprint — and the program
+        cache keys on the POST-optimization fingerprint, so
+        structurally equal requests share one compiled entry;
+        ``optimize="none"`` serves raw), and the partition budget
+        (``max_gates`` — graphs above it are split by output-cone
+        clustering and served as a pipelined program sequence).  The
+        loose ``n_unit``/``alloc``/``max_gates``/``optimize`` kwargs
+        are the deprecated pre-spec convention.
       capacity: samples per fabric invocation; rounded up to a multiple of
         ``32 * n_devices`` so every device shard packs whole words. Default
         ``32 * words_per_device * n_devices``.
       words_per_device: sizes the default capacity (W words per device).
-      max_gates: partition budget — graphs above it are split by
-        output-cone clustering and served as a pipelined program sequence.
       mesh: optional 1-axis ``jax.sharding.Mesh`` for data-parallel
         serving; default builds one over all local devices when there is
         more than one (or when ``shard=True``).
@@ -291,22 +384,18 @@ class LogicEngine:
       use_ref / interpret / block_w: forwarded to the kernel layer.
     """
 
-    def __init__(self, n_unit: int = 64, alloc: str = "liveness",
+    def __init__(self, spec: CompileSpec | int | None = None, *,
                  capacity: int | None = None, words_per_device: int = 4,
-                 max_gates: int | None = None, mesh: Mesh | None = None,
+                 mesh: Mesh | None = None,
                  shard: bool | None = None, cache: ProgramCache | None = None,
                  max_programs: int | None = None,
                  max_retained: int | None = None, use_ref: bool = False,
                  interpret: bool = True, block_w: int = _k.LANE,
-                 optimize="default"):
-        self.n_unit = n_unit
-        self.alloc = alloc
-        self.max_gates = max_gates
-        # gate-level pass pipeline (core/opt.py): submitted graphs are
-        # optimized (memoized per raw fingerprint) and the program cache
-        # keys on the POST-optimization fingerprint, so structurally
-        # equal requests share one compiled entry. "none" serves raw.
-        self.pipeline = resolve_pipeline(optimize)
+                 n_unit=_UNSET, alloc=_UNSET, max_gates=_UNSET,
+                 optimize=_UNSET):
+        self.spec = resolve_spec(spec, caller="LogicEngine", n_unit=n_unit,
+                                 alloc=alloc, max_gates=max_gates,
+                                 optimize=optimize)
         self.use_ref = use_ref
         self.interpret = interpret
         self.block_w = block_w
@@ -350,11 +439,28 @@ class LogicEngine:
         self.samples_served = 0
         self._occupancy_sum = 0.0
 
+    # -- compilation-target views (read-only; the spec is the source) -------
+
+    @property
+    def n_unit(self):
+        return self.spec.n_unit
+
+    @property
+    def alloc(self) -> str:
+        return self.spec.alloc
+
+    @property
+    def max_gates(self) -> int | None:
+        return self.spec.max_gates
+
+    @property
+    def pipeline(self):
+        return self.spec.pipeline
+
     # -- program / runner plumbing ------------------------------------------
 
     def _entry(self, graph: LogicGraph) -> CompiledEntry:
-        entry = self.cache.get(graph, self.n_unit, self.alloc,
-                               self.max_gates, pipeline=self.pipeline)
+        entry = self.cache.get(graph, self.spec)
         if self._exec_key not in entry.runners:
             entry.runners[self._exec_key] = self._build_runner(entry)
         return entry

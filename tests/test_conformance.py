@@ -25,6 +25,7 @@ from repro.core import espresso
 from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, OpCode,
                                 random_graph)
 from repro.core.nullanet import layer_to_graph
+from repro.core.spec import CompileSpec
 from repro.core.scheduler import compile_graph, execute_program_np
 from repro.core.synth import optimize
 from repro.core.verilog import emit_verilog, parse_verilog
@@ -49,7 +50,8 @@ def assert_conformance(graph: LogicGraph, bits: np.ndarray,
     assert (got_v == want).all(), "verilog round-trip diverged"
     for n_unit in n_units:
         for alloc in allocs:
-            prog = compile_graph(graph, n_unit=n_unit, alloc=alloc)
+            prog = compile_graph(graph, CompileSpec(n_unit=n_unit, alloc=alloc,
+                                                    optimize="none"))
             ctx = f"n_unit={n_unit} alloc={alloc}"
             got_np = execute_program_np(prog, bits)
             assert (got_np == want).all(), f"execute_program_np ({ctx})"
@@ -167,8 +169,7 @@ def test_compile_optimize_knob_conformance(rng):
     want = g.evaluate(bits)
     for n_unit in N_UNITS:
         for alloc in ALLOCS:
-            prog = compile_graph(g, n_unit=n_unit, alloc=alloc,
-                                 optimize="default")
+            prog = compile_graph(g, CompileSpec(n_unit=n_unit, alloc=alloc))
             assert (execute_program_np(prog, bits) == want).all()
             assert (logic_infer_bits(prog, bits, use_ref=True) == want).all()
             assert (logic_infer_bits(prog, bits, use_ref=False) == want).all()
@@ -242,7 +243,7 @@ def test_layer_with_constant_and_live_neurons():
 def test_zero_neuron_layer():
     g = layer_to_graph(all_patterns(3), np.zeros((3, 0)), np.zeros(0))
     assert g.n_outputs == 0
-    prog = compile_graph(g, n_unit=8)
+    prog = compile_graph(g, CompileSpec(n_unit=8, optimize="none"))
     out = execute_program_np(prog, all_patterns(3).astype(bool))
     assert out.shape == (8, 0)
 
@@ -250,7 +251,7 @@ def test_zero_neuron_layer():
 def test_engine_serves_gateless_and_constant_graphs(rng):
     """The serving engine must handle degenerate programs end to end."""
     from repro.serve import LogicEngine
-    eng = LogicEngine(n_unit=8, capacity=64)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=64)
     g = LogicGraph(3, name="deg")
     g.set_outputs([CONST1, g.input_wire(2), CONST0])
     bits = _bits(rng, 50, 3)

@@ -7,6 +7,7 @@ from repro.core.gate_ir import random_graph
 from repro.core.optimizer import binary_search, sweep
 from repro.core.scheduler import compile_graph
 from repro.core.simulator import simulate_no_pipeline, simulate_pipeline
+from repro.core.spec import CompileSpec
 
 
 @pytest.fixture(scope="module")
@@ -41,7 +42,8 @@ def test_binary_search_matches_sweep(workload):
 
 def test_pipeline_beats_sequential(workload):
     g, _ = workload
-    progs = [compile_graph(g, n_unit=64) for _ in range(8)]
+    progs = [compile_graph(g, CompileSpec(n_unit=64, optimize="none"))
+             for _ in range(8)]
     pipe = simulate_pipeline(progs, n_input_vectors=4096)
     seq = simulate_no_pipeline(progs, n_input_vectors=4096)
     assert pipe.total_cycles <= seq.total_cycles
@@ -58,7 +60,7 @@ def test_model_error_shrinks_with_m(workload):
     the number of pipelined modules grows."""
     g, stats = workload
     model = CostModel()
-    prog = compile_graph(g, n_unit=64)
+    prog = compile_graph(g, CompileSpec(n_unit=64, optimize="none"))
     errs = {}
     for m in (2, 64):
         sim = simulate_pipeline([prog] * m, n_input_vectors=4096)
@@ -73,9 +75,10 @@ def test_eq23(workload):
     and program-derived stats report the scheduled count."""
     g, stats = workload
     for u in (1, 7, 64, 4096):
-        unfused = compile_graph(g, n_unit=u, fuse_levels=False)
+        unfused = compile_graph(g, CompileSpec(n_unit=u, fuse_levels=False,
+                                               optimize="none"))
         assert n_subkernels(stats, u) == unfused.n_steps
-        fused = compile_graph(g, n_unit=u)
+        fused = compile_graph(g, CompileSpec(n_unit=u, optimize="none"))
         assert fused.n_steps <= unfused.n_steps
         assert n_subkernels(FfclStats.from_program(fused), u) == fused.n_steps
 

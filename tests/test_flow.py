@@ -13,6 +13,8 @@ import numpy as np
 import pytest
 
 from repro.core.gate_ir import LogicGraph, OpCode, compose_graphs
+from repro.core.opt import PassManager
+from repro.core.spec import CompileSpec
 from repro.core.scheduler import compile_graph, execute_program_np
 from repro.flow import (FlowConfig, build_classifier, convert_layer,
                         hard_forward, input_bits, layer_to_program, run_flow)
@@ -54,8 +56,9 @@ def _expected(bits: np.ndarray) -> np.ndarray:
 def test_packed_handoff_matches_unpack_repack(rng, alloc, batch):
     """Chained words == per-layer unpack->repack == hand truth, bit for bit."""
     ga, gb = _layer_a(), _layer_b()
-    pa = compile_graph(ga, n_unit=8, alloc=alloc)
-    pb = compile_graph(gb, n_unit=8, alloc=alloc)
+    spec = CompileSpec(n_unit=8, alloc=alloc, optimize="none")
+    pa = compile_graph(ga, spec)
+    pb = compile_graph(gb, spec)
     bits = rng.integers(0, 2, (batch, 3)).astype(bool)
 
     # packed handoff: pack once, words flow layer to layer
@@ -84,8 +87,9 @@ def test_padding_lanes_stay_clean(rng, batch):
     """Zero padding in the last word must not leak into real samples: the
     same samples must produce identical outputs at any batch position."""
     ga, gb = _layer_a(), _layer_b()
-    pa = compile_graph(ga, n_unit=8, alloc="liveness")
-    pb = compile_graph(gb, n_unit=8, alloc="liveness")
+    spec = CompileSpec(n_unit=8, optimize="none")
+    pa = compile_graph(ga, spec)
+    pb = compile_graph(gb, spec)
     bits = rng.integers(0, 2, (batch, 3)).astype(bool)
     out_full = logic_infer_bits(pb, logic_infer_bits(pa, bits))
     head = bits[:17]
@@ -98,7 +102,7 @@ def test_compose_graphs_equals_chain(rng):
     stacked = compose_graphs([ga, gb])
     bits = rng.integers(0, 2, (40, 3)).astype(bool)
     assert (stacked.evaluate(bits) == _expected(bits)).all()
-    prog = compile_graph(stacked, n_unit=8, alloc="liveness")
+    prog = compile_graph(stacked, CompileSpec(n_unit=8, optimize="none"))
     assert (execute_program_np(prog, bits) == _expected(bits)).all()
 
 
@@ -140,7 +144,7 @@ def test_convert_layer_enum_is_exact(rng):
     W = rng.normal(size=(6, 4)).astype(np.float32)
     b = rng.normal(size=4).astype(np.float32)
     layer = convert_layer(W, b, np.zeros((0, 6), np.uint8),
-                          n_unit=8, mode="enum", name="t")
+                          CompileSpec(n_unit=8), mode="enum", name="t")
     pats = ((np.arange(64)[:, None] >> np.arange(6)[None, :]) & 1
             ).astype(np.uint8)
     want = ((2.0 * pats - 1.0) @ W.astype(np.float64)
@@ -162,7 +166,7 @@ def test_classifier_three_backends_bit_identical(rng):
         "b2": np.zeros(3, np.float32),
     }
     x = rng.integers(0, 2, (77, 7)).astype(np.uint8)
-    clf = build_classifier(params, 3, x, n_unit=8)
+    clf = build_classifier(params, 3, x, CompileSpec(n_unit=8))
     bits = input_bits(x)
     acts, logits = hard_forward(params, bits, 3)
     outs = {b: clf.hidden_bits(bits, backend=b)
@@ -185,8 +189,10 @@ def test_classifier_optimize_on_off_parity(rng):
         "b2": np.zeros(3, np.float32),
     }
     x = rng.integers(0, 2, (64, 7)).astype(np.uint8)
-    raw = build_classifier(params, 3, x, n_unit=8, optimize="none")
-    opt = build_classifier(params, 3, x, n_unit=8)     # default pipeline
+    raw = build_classifier(params, 3, x,
+                           CompileSpec(n_unit=8, optimize="none"))
+    opt = build_classifier(params, 3, x,
+                           CompileSpec(n_unit=8))      # default pipeline
     bits = input_bits(x)
     acts, _ = hard_forward(params, bits, 3)
     for backend in ("reference", "pallas", "engine"):
@@ -206,10 +212,11 @@ def test_run_flow_optimize_none_matches_default():
     """flow.e2e accuracy parity holds with optimization on AND off, and
     both configurations report identical accuracies (semantics equal)."""
     cfg = FlowConfig(n_features=6, hidden=(5,), n_classes=3,
-                     n_samples=400, train_steps=40, n_unit=8)
-    assert cfg.optimize == "default"
+                     n_samples=400, train_steps=40, spec=CompileSpec(n_unit=8))
+    assert cfg.optimize == PassManager.default()   # normalized spec value
     report, _ = run_flow(cfg)
-    report_raw, _ = run_flow(dataclasses.replace(cfg, optimize="none"))
+    report_raw, _ = run_flow(dataclasses.replace(
+        cfg, spec=cfg.spec.with_(optimize="none")))
     assert report.parity and report.bit_identical
     assert report_raw.parity and report_raw.bit_identical
     assert report.logic_acc == report_raw.logic_acc
@@ -227,16 +234,15 @@ def test_classifier_engine_partitioned_matches(rng):
         "b1": np.zeros(2, np.float32),
     }
     x = rng.integers(0, 2, (40, 6)).astype(np.uint8)
-    clf = build_classifier(params, 2, x, n_unit=8)
+    clf = build_classifier(params, 2, x, CompileSpec(n_unit=8))
     bits = input_bits(x)
     ref = clf.hidden_bits(bits, backend="reference")
     budget = max(2, clf.stacked_graph.n_gates // 3)
-    eng = LogicEngine(n_unit=8, capacity=64, max_gates=budget)
+    eng = LogicEngine(CompileSpec(n_unit=8, max_gates=budget), capacity=64)
     got = clf.hidden_bits(bits, backend="engine", engine=eng)
     assert (got == ref).all()
     # the entry the engine served, keyed on the post-optimization form
-    entry = eng.cache.get(clf.stacked_graph, 8, "liveness", budget,
-                          pipeline=eng.pipeline)
+    entry = eng.cache.get(clf.stacked_graph, eng.spec)
     assert len(entry.programs) > 1     # the budget actually partitioned
     assert eng.cache.misses == 1       # no phantom raw compile
 
@@ -248,9 +254,9 @@ def test_ffn_to_program_wrapper_matches_flow(rng):
     p = {"w_in": rng.normal(size=(6, 4)).astype(np.float32),
          "b_in": rng.normal(size=4).astype(np.float32)}
     calib = rng.integers(0, 2, (50, 6)).astype(np.uint8)
-    via_model = ffn_to_program(p, calib, n_unit=8, mode="isf")
+    via_model = ffn_to_program(p, calib, CompileSpec(n_unit=8), mode="isf")
     via_flow = layer_to_program(p["w_in"], p["b_in"], calib,
-                                n_unit=8, mode="isf", alloc="liveness")
+                                CompileSpec(n_unit=8), mode="isf")
     assert (via_model.src_a == via_flow.src_a).all()
     assert (via_model.opcode == via_flow.opcode).all()
     assert via_model.n_addr == via_flow.n_addr
@@ -261,7 +267,8 @@ def test_run_flow_exact_parity():
     """The acceptance criterion, small: logic acc == binarized acc exactly,
     all backends bit-identical, flow stats populated."""
     cfg = FlowConfig(n_features=8, hidden=(6, 5), n_classes=3,
-                     n_samples=700, train_steps=60, n_unit=16)
+                     n_samples=700, train_steps=60,
+                     spec=CompileSpec(n_unit=16))
     assert cfg.exact
     report, clf = run_flow(cfg)
     assert report.parity

@@ -4,6 +4,7 @@ import pytest
 
 from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, random_graph
 from repro.core.levelize import levelize
+from repro.core.spec import CompileSpec
 from repro.core.scheduler import compile_graph, execute_program_np
 from repro.core.verilog import emit_verilog, parse_verilog
 
@@ -24,7 +25,7 @@ def test_g1_paper_example():
     assert lv.depth == 2
     assert list(lv.histogram()) == [2, 1]
     # schedule on 2 units: 2 sub-kernels, second one half-NOP (paper: [AND,NOP])
-    prog = compile_graph(g, n_unit=2)
+    prog = compile_graph(g, CompileSpec(n_unit=2, optimize="none"))
     assert prog.n_steps == 2
     assert prog.opcode[0].tolist() == [int(OpCode.AND)] * 2
     assert prog.opcode[1].tolist() == [int(OpCode.AND), int(OpCode.NOP)]
@@ -50,7 +51,7 @@ def test_g2_paper_example():
     assert lv.depth == 3
     assert list(lv.histogram()) == [4, 2, 1]
     # two units (paper): level1 -> 2 sub-kernels, levels 2,3 -> 1 each = 4
-    prog = compile_graph(g, n_unit=2)
+    prog = compile_graph(g, CompileSpec(n_unit=2, optimize="none"))
     assert prog.n_steps == 4  # paper: "completed within ... 4 cycles"
     X = all_patterns(4)
     av, bv, cv, dv = X.T

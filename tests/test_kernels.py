@@ -10,6 +10,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core import packing
 from repro.core.gate_ir import random_graph
 from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.spec import CompileSpec
 from repro.kernels.logic_dsp import (logic_infer_bits,
                                      pack_bits_jnp, unpack_bits_jnp)
 from repro.kernels.xnor_gemm import pack_pm1, xnor_gemm, xnor_gemm_ref
@@ -48,7 +49,8 @@ def test_packing_roundtrip(batch, n, seed):
 ])
 def test_logic_kernel_vs_oracle(ni, ng, no, n_unit, alloc, batch, rng):
     g = random_graph(rng, ni, ng, no)
-    prog = compile_graph(g, n_unit=n_unit, alloc=alloc)
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, alloc=alloc,
+                                        optimize="none"))
     X = rng.integers(0, 2, (batch, ni)).astype(bool)
     ref = g.evaluate(X)
     assert (execute_program_np(prog, X) == ref).all()
@@ -59,7 +61,7 @@ def test_logic_kernel_vs_oracle(ni, ng, no, n_unit, alloc, batch, rng):
 def test_logic_kernel_multiblock(rng):
     """W > block_w exercises the grid (paper's multi-round batching)."""
     g = random_graph(rng, 8, 100, 4)
-    prog = compile_graph(g, n_unit=16, alloc="liveness")
+    prog = compile_graph(g, CompileSpec(n_unit=16, optimize="none"))
     X = rng.integers(0, 2, (32 * 300, 8)).astype(bool)  # W = 300 words
     assert (logic_infer_bits(prog, X, block_w=128) == g.evaluate(X)).all()
 
@@ -70,8 +72,9 @@ def test_logic_kernel_property(seed):
     rng = np.random.default_rng(seed)
     ni = int(rng.integers(2, 10))
     g = random_graph(rng, ni, int(rng.integers(5, 120)), 3)
-    prog = compile_graph(g, n_unit=int(rng.integers(1, 33)),
-                         alloc=rng.choice(["direct", "liveness"]))
+    prog = compile_graph(g, CompileSpec(
+        n_unit=int(rng.integers(1, 33)),
+        alloc=str(rng.choice(["direct", "liveness"])), optimize="none"))
     X = rng.integers(0, 2, (int(rng.integers(1, 100)), ni)).astype(bool)
     assert (logic_infer_bits(prog, X) == g.evaluate(X)).all()
 

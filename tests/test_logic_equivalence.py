@@ -12,6 +12,7 @@ import pytest
 from repro.core.cost_model import FfclStats, n_subkernels
 from repro.core.gate_ir import MIXED_DISPATCH, random_graph
 from repro.core.levelize import levelize
+from repro.core.spec import CompileSpec
 from repro.core.scheduler import compile_graph, execute_program_np
 from repro.kernels.logic_dsp import logic_infer_bits
 
@@ -32,7 +33,8 @@ def _random_case(seed):
 @pytest.mark.parametrize("alloc", ["direct", "liveness"])
 def test_all_backends_match_graph_eval(alloc, fuse, seed):
     g, X, n_unit = _random_case(seed)
-    prog = compile_graph(g, n_unit=n_unit, alloc=alloc, fuse_levels=fuse)
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, alloc=alloc,
+                                        fuse_levels=fuse, optimize="none"))
     ref = g.evaluate(X)
     assert (execute_program_np(prog, X) == ref).all()          # numpy oracle
     assert (logic_infer_bits(prog, X) == ref).all()            # pallas
@@ -46,8 +48,8 @@ def test_schedule_dependency_order(seed):
     for both the unfused (level_of_step-monotone) and fused layouts."""
     g, _, n_unit = _random_case(seed)
     for fuse in (False, True):
-        prog = compile_graph(g, n_unit=n_unit, alloc="liveness",
-                             fuse_levels=fuse)
+        prog = compile_graph(g, CompileSpec(n_unit=n_unit, fuse_levels=fuse,
+                                            optimize="none"))
         produced_at = {0: -1, 1: -1}
         produced_at.update((int(a), -1) for a in prog.input_addrs)
         for s in range(prog.n_steps):
@@ -65,7 +67,7 @@ def test_schedule_dependency_order(seed):
 @pytest.mark.parametrize("seed", [1, 4, 7])
 def test_homogeneity_metadata_consistent(seed):
     g, _, n_unit = _random_case(seed)
-    prog = compile_graph(g, n_unit=n_unit)
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, optimize="none"))
     assert prog.step_opcode.shape == (prog.n_steps,)
     assert prog.homogeneous.shape == (prog.n_steps,)
     for s in range(prog.n_steps):
@@ -94,7 +96,7 @@ def test_real_nop_gates_not_clobbered():
     ref = g.evaluate(X)
     assert (ref[:, 0] == 0).all()        # NOP gate always produces 0
     for n_unit in (2, 8):
-        prog = compile_graph(g, n_unit=n_unit)
+        prog = compile_graph(g, CompileSpec(n_unit=n_unit, optimize="none"))
         assert (execute_program_np(prog, X) == ref).all()
         assert (logic_infer_bits(prog, X) == ref).all()
         assert (logic_infer_bits(prog, X, use_ref=True) == ref).all()
@@ -108,7 +110,7 @@ def test_gateless_program_executes():
     g = LogicGraph(3)
     g.set_outputs([0, 1, g.input_wire(2)])
     X = np.random.default_rng(1).integers(0, 2, (37, 3)).astype(bool)
-    prog = compile_graph(g, n_unit=8)
+    prog = compile_graph(g, CompileSpec(n_unit=8, optimize="none"))
     assert prog.n_steps == 0
     ref = g.evaluate(X)
     assert (execute_program_np(prog, X) == ref).all()
@@ -121,8 +123,10 @@ def test_opcode_sort_increases_homogeneity():
     steps once sorted; the unsorted layout stays mixed."""
     rng = np.random.default_rng(2)
     g = random_graph(rng, 24, 4000, 8, locality=4000)   # few, wide levels
-    ps = compile_graph(g, n_unit=8, opcode_sort=True, fuse_levels=False)
-    pu = compile_graph(g, n_unit=8, opcode_sort=False, fuse_levels=False)
+    ps = compile_graph(g, CompileSpec(n_unit=8, opcode_sort=True,
+                                      fuse_levels=False, optimize="none"))
+    pu = compile_graph(g, CompileSpec(n_unit=8, opcode_sort=False,
+                                      fuse_levels=False, optimize="none"))
     assert ps.n_steps == pu.n_steps
     assert ps.homogeneous.mean() > pu.homogeneous.mean()
     assert ps.homogeneous.mean() > 0.5
@@ -135,8 +139,10 @@ def test_fusion_shrinks_ragged_schedules():
     g = random_graph(rng, 32, 1500, 16, locality=128)
     shrunk = 0
     for n_unit in (8, 16, 24):
-        pf = compile_graph(g, n_unit=n_unit, fuse_levels=True)
-        pu = compile_graph(g, n_unit=n_unit, fuse_levels=False)
+        pf = compile_graph(g, CompileSpec(n_unit=n_unit, fuse_levels=True,
+                                          optimize="none"))
+        pu = compile_graph(g, CompileSpec(n_unit=n_unit, fuse_levels=False,
+                                          optimize="none"))
         expected = int(np.ceil(levelize(g).histogram() / n_unit).sum())
         assert pu.n_steps == expected
         assert pf.n_steps <= pu.n_steps

@@ -16,6 +16,7 @@ from repro.core.opt import (ConstantFold, DeadGateElim, OptResult,
                             PassManager, Rebalance, SimplifyIdentities,
                             StructuralHash, compose_remaps, resolve_pipeline)
 from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.spec import CompileSpec
 
 try:
     from hypothesis import given, settings, strategies as st
@@ -320,16 +321,17 @@ def test_resolve_pipeline_knob():
 def test_compile_graph_optimize_knob(rng):
     g = random_graph(rng, 9, 300, 8, locality=24)
     X = _vectors(g)
-    raw = compile_graph(g, n_unit=16)
-    opt = compile_graph(g, n_unit=16, optimize="default")
-    custom = compile_graph(g, n_unit=16, optimize=PassManager.default())
+    raw = compile_graph(g, CompileSpec(n_unit=16, optimize="none"))
+    opt = compile_graph(g, CompileSpec(n_unit=16, optimize="default"))
+    custom = compile_graph(g, CompileSpec(n_unit=16,
+                                          optimize=PassManager.default()))
     assert opt.n_gates < raw.n_gates
     assert opt.n_steps < raw.n_steps
     assert custom.n_gates == opt.n_gates
     for prog in (raw, opt, custom):
         assert (execute_program_np(prog, X) == g.evaluate(X)).all()
     with pytest.raises(ValueError, match="optimize"):
-        compile_graph(g, n_unit=16, optimize="bogus")
+        compile_graph(g, CompileSpec(n_unit=16, optimize="bogus"))
 
 
 def test_compile_graph_optimize_ignores_stale_levelization(rng):
@@ -337,7 +339,7 @@ def test_compile_graph_optimize_ignores_stale_levelization(rng):
     the optimized schedule."""
     g = random_graph(rng, 6, 120, 6, locality=16)
     lv_raw = levelize(g)
-    prog = compile_graph(g, n_unit=8, lv=lv_raw, optimize="default")
+    prog = compile_graph(g, CompileSpec(n_unit=8), lv=lv_raw)
     X = _vectors(g)
     assert (execute_program_np(prog, X) == g.evaluate(X)).all()
 
@@ -345,8 +347,8 @@ def test_compile_graph_optimize_ignores_stale_levelization(rng):
 def test_partition_optimize_per_cluster(rng):
     from repro.core.partition import execute_partitions, partition
     g = random_graph(rng, 10, 400, 16, locality=40)
-    raw = partition(g, max_gates=120)
-    opt = partition(g, max_gates=120, optimize="default")
+    raw = partition(g, 120)
+    opt = partition(g, CompileSpec(max_gates=120, optimize="default"))
     X = _vectors(g)
     want = g.evaluate(X)
     assert (execute_partitions(raw, X) == want).all()
@@ -379,7 +381,7 @@ def test_program_cache_keys_on_post_opt_fingerprint(rng):
     assert g1.fingerprint() != g2.fingerprint()
 
     cache = ProgramCache()
-    eng = LogicEngine(n_unit=8, capacity=32, cache=cache)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32, cache=cache)
     X = _vectors(g1)
     assert (eng.serve(g1, X) == g1.evaluate(X)).all()
     assert (eng.serve(g2, X) == g1.evaluate(X)).all()
@@ -387,8 +389,8 @@ def test_program_cache_keys_on_post_opt_fingerprint(rng):
 
     # optimize="none" keys on the raw fingerprints -> two entries
     raw_cache = ProgramCache()
-    raw_eng = LogicEngine(n_unit=8, capacity=32, cache=raw_cache,
-                          optimize="none")
+    raw_eng = LogicEngine(CompileSpec(n_unit=8, optimize="none"),
+                          capacity=32, cache=raw_cache)
     raw_eng.serve(g1, X)
     raw_eng.serve(g2, X)
     assert raw_cache.misses == 2
@@ -402,8 +404,9 @@ def test_program_cache_budget_normalizes_on_optimized_gates(rng):
     pm = PassManager.default()
     assert pm.run(g).graph.n_gates < g.n_gates
     cache = ProgramCache()
-    mono = cache.get(g, 8, pipeline=pm)
-    budget = cache.get(g, 8, max_gates=g.n_gates, pipeline=pm)
+    spec = CompileSpec(n_unit=8, optimize=pm)
+    mono = cache.get(g, spec)
+    budget = cache.get(g, spec.with_(max_gates=g.n_gates))
     assert budget is mono                   # raw-size budget is unbinding
     assert cache.misses == 1 and cache.hits == 1
 
@@ -473,6 +476,5 @@ if HAVE_HYPOTHESIS:
     @given(graphs(), st.sampled_from([1, 8, 64]))
     def test_hypothesis_compiled_optimized_equivalence(g, n_unit):
         X = _vectors(g)
-        prog = compile_graph(g, n_unit=n_unit, alloc="liveness",
-                             optimize="default")
+        prog = compile_graph(g, CompileSpec(n_unit=n_unit))
         assert (execute_program_np(prog, X) == g.evaluate(X)).all()

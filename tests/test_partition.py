@@ -11,6 +11,7 @@ from repro.core.partition import (compile_partitions, duplication_factor,
                                   execute_partitions, output_cones,
                                   partition)
 from repro.core.simulator import simulate_pipeline
+from repro.core.spec import CompileSpec
 from repro.kernels.logic_dsp import logic_infer_bits
 
 
@@ -19,7 +20,7 @@ from repro.kernels.logic_dsp import logic_infer_bits
 def test_partition_equivalence(seed, max_gates):
     rng = np.random.default_rng(seed)
     g = random_graph(rng, 10, 250, 12, locality=64)
-    parts = partition(g, max_gates=max_gates)
+    parts = partition(g, max_gates)
     # every output appears exactly once
     idx = sorted(i for p in parts for i in p.output_indices)
     assert idx == list(range(g.n_outputs))
@@ -35,7 +36,7 @@ def test_partition_respects_budget(seed):
     cones = output_cones(g)
     biggest = max(len(c) for c in cones)
     budget = max(biggest, 60)   # budget must admit the largest single cone
-    parts = partition(g, max_gates=budget)
+    parts = partition(g, budget)
     for p in parts:
         assert p.graph.n_gates <= budget
 
@@ -43,9 +44,9 @@ def test_partition_respects_budget(seed):
 def test_partition_through_kernel(rng):
     """Partitioned execution through the Pallas fabric == monolithic."""
     g = random_graph(rng, 12, 400, 20, locality=48)
-    parts = partition(g, max_gates=150)
+    parts = partition(g, 150)
     assert len(parts) >= 2
-    progs = compile_partitions(parts, n_unit=16)
+    progs = compile_partitions(parts, CompileSpec(n_unit=16))
 
     def kernel_exec(graph, x):
         prog = progs[[p.graph is graph for p in parts].index(True)]
@@ -56,7 +57,7 @@ def test_partition_through_kernel(rng):
     assert (got == g.evaluate(X)).all()
     # buffer budget actually shrank vs the monolithic program
     from repro.core.scheduler import compile_graph
-    mono = compile_graph(g, n_unit=16, alloc="liveness")
+    mono = compile_graph(g, CompileSpec(n_unit=16, optimize="none"))
     assert max(p.n_addr for p in progs) < mono.n_addr
 
 
@@ -64,7 +65,7 @@ def test_duplication_vs_pipelining_tradeoff(rng):
     """The split costs duplicated gates but the modules pipeline (paper
     eq. 2); the simulator quantifies both sides."""
     g = random_graph(rng, 16, 600, 24, locality=64)
-    parts = partition(g, max_gates=250)
+    parts = partition(g, 250)
     dup = duplication_factor(g, parts)
     # duplication bounded by the partition count (every part <= whole graph)
     assert 1.0 <= dup <= len(parts)

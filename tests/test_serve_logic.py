@@ -7,6 +7,7 @@ import pytest
 
 from repro.core.gate_ir import random_graph
 from repro.core.scheduler import compile_graph
+from repro.core.spec import CompileSpec
 from repro.kernels.logic_dsp import logic_infer_bits
 from repro.serve import LogicEngine, ProgramCache, SlotTable
 
@@ -22,7 +23,7 @@ def _graph(rng, n_in=12, n_gates=300, n_out=10):
 def test_program_cache_hit_on_structural_copy(rng):
     """Keyed by structure: a renamed copy reuses the compiled program."""
     g = _graph(rng)
-    eng = LogicEngine(n_unit=16, capacity=64)
+    eng = LogicEngine(CompileSpec(n_unit=16), capacity=64)
     X = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
     eng.serve(g, X)
     assert (eng.cache.hits, eng.cache.misses) == (0, 1)
@@ -40,11 +41,11 @@ def test_program_cache_miss_on_structure_change(rng):
     g2.set_outputs(list(reversed(g2.outputs)))
     assert g.fingerprint() != g2.fingerprint()
     cache = ProgramCache()
-    cache.get(g, 16)
-    cache.get(g2, 16)
-    cache.get(g, 32)            # same graph, different fabric width
+    cache.get(g, CompileSpec(n_unit=16))
+    cache.get(g2, CompileSpec(n_unit=16))
+    cache.get(g, CompileSpec(n_unit=32))            # same graph, different fabric width
     assert cache.misses == 3 and cache.hits == 0
-    cache.get(g, 16)
+    cache.get(g, CompileSpec(n_unit=16))
     assert cache.hits == 1
 
 
@@ -52,10 +53,10 @@ def test_program_cache_lru_eviction(rng):
     cache = ProgramCache(max_entries=2)
     graphs = [_graph(rng, n_gates=60 + i) for i in range(3)]
     for g in graphs:
-        cache.get(g, 8)
+        cache.get(g, CompileSpec(n_unit=8))
     assert len(cache) == 2
     # oldest entry (graphs[0]) was evicted; re-fetch recompiles
-    cache.get(graphs[0], 8)
+    cache.get(graphs[0], CompileSpec(n_unit=8))
     assert cache.misses == 4
 
 
@@ -63,18 +64,21 @@ def test_unbinding_budget_shares_monolithic_entry(rng):
     """Budgets the graph fits under normalize to the no-budget key."""
     g = _graph(rng, n_gates=80)
     cache = ProgramCache()
-    cache.get(g, 8, max_gates=None)
-    cache.get(g, 8, max_gates=400)       # 80 <= 400: same monolithic program
-    cache.get(g, 8, max_gates=10 ** 6)
+    # optimize="none": normalization must see the 80 raw gates (the
+    # default pipeline would shrink the graph under the binding budget)
+    spec = CompileSpec(n_unit=8, optimize="none")
+    cache.get(g, spec)
+    cache.get(g, spec.with_(max_gates=400))   # 80 <= 400: same mono program
+    cache.get(g, spec.with_(max_gates=10 ** 6))
     assert cache.misses == 1 and cache.hits == 2
-    cache.get(g, 8, max_gates=30)        # binding budget: new pipeline
+    cache.get(g, spec.with_(max_gates=30))    # binding budget: new pipeline
     assert cache.misses == 2
 
 
 def test_max_retained_bounds_unclaimed_results(rng):
     """Fire-and-forget traffic cannot grow _requests without bound."""
     g = _graph(rng, n_in=6, n_gates=40, n_out=4)
-    eng = LogicEngine(n_unit=8, capacity=32, max_retained=2)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32, max_retained=2)
     uids = []
     for _ in range(5):
         uids.append(eng.submit(g, rng.integers(0, 2, (4, 6)).astype(bool)))
@@ -90,7 +94,7 @@ def test_claimed_results_leave_retention_window(rng):
     max_retained bounds UNCLAIMED results only, and a steady
     submit/drain/claim loop leaves no residue behind."""
     g = _graph(rng, n_in=6, n_gates=40, n_out=4)
-    eng = LogicEngine(n_unit=8, capacity=32, max_retained=2)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32, max_retained=2)
     u0 = eng.submit(g, rng.integers(0, 2, (4, 6)).astype(bool))
     eng.drain()
     u1 = eng.submit(g, rng.integers(0, 2, (4, 6)).astype(bool))
@@ -113,7 +117,7 @@ def test_eviction_with_queued_requests_recovers(rng):
     requests complete instead of wedging the engine."""
     g1 = _graph(rng, n_gates=80)
     g2 = _graph(rng, n_gates=90)
-    eng = LogicEngine(n_unit=8, capacity=32, max_programs=1)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32, max_programs=1)
     X1 = rng.integers(0, 2, (10, g1.n_inputs)).astype(bool)
     X2 = rng.integers(0, 2, (10, g2.n_inputs)).astype(bool)
     u1 = eng.submit(g1, X1)
@@ -130,15 +134,17 @@ def test_shared_cache_engines_keep_their_own_runners(rng):
     runner config (backend/capacity/shard) is part of the runner key."""
     g = _graph(rng)
     cache = ProgramCache()
-    a = LogicEngine(n_unit=16, capacity=32, use_ref=True, cache=cache)
-    b = LogicEngine(n_unit=16, capacity=64, shard=True, cache=cache)
+    a = LogicEngine(CompileSpec(n_unit=16), capacity=32, use_ref=True,
+                    cache=cache)
+    b = LogicEngine(CompileSpec(n_unit=16), capacity=64, shard=True,
+                    cache=cache)
     X = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
     assert (a.serve(g, X) == g.evaluate(X)).all()
     assert (b.serve(g, X) == g.evaluate(X)).all()    # cache hit, own runner
     assert cache.misses == 1 and cache.hits >= 1
     # fetch the entry the engines shared: keyed on the POST-optimization
     # fingerprint, so the lookup goes through the same pass pipeline
-    entry = cache.get(g, 16, pipeline=a.pipeline)
+    entry = cache.get(g, a.spec)
     assert len(entry.runners) == 2                   # one trace per config
 
 
@@ -149,8 +155,8 @@ def test_shared_cache_engines_keep_their_own_runners(rng):
 def test_engine_parity_vs_logic_infer_bits(rng):
     """Batched serving == direct fused kernel call, bit for bit."""
     g = _graph(rng)
-    prog = compile_graph(g, n_unit=16, alloc="liveness")
-    eng = LogicEngine(n_unit=16, capacity=96)
+    prog = compile_graph(g, CompileSpec(n_unit=16))
+    eng = LogicEngine(CompileSpec(n_unit=16), capacity=96)
     for n in (1, 31, 32, 37, 96):        # ragged and word-aligned sizes
         X = rng.integers(0, 2, (n, g.n_inputs)).astype(bool)
         got = eng.serve(g, X)
@@ -164,7 +170,7 @@ def test_engine_parity_vs_logic_infer_bits(rng):
 def test_engine_parity_on_cached_path(rng):
     """Second serve (cache hit, warm jit) stays exact."""
     g = _graph(rng)
-    eng = LogicEngine(n_unit=16, capacity=64)
+    eng = LogicEngine(CompileSpec(n_unit=16), capacity=64)
     X1 = rng.integers(0, 2, (40, g.n_inputs)).astype(bool)
     X2 = rng.integers(0, 2, (64, g.n_inputs)).astype(bool)
     eng.serve(g, X1)
@@ -177,7 +183,7 @@ def test_gateless_graph_served(rng):
     from repro.core.gate_ir import LogicGraph
     g = LogicGraph(4, name="wires-only")
     g.set_outputs([2, 5, 3])
-    eng = LogicEngine(n_unit=8, capacity=32)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32)
     X = rng.integers(0, 2, (11, 4)).astype(bool)
     assert (eng.serve(g, X) == g.evaluate(X)).all()
 
@@ -206,7 +212,7 @@ def test_slot_table_acquire_release_recycles():
 def test_slot_recycling_ragged_requests(rng):
     """Ragged sizes (not multiples of 32) pack together and recycle slots."""
     g = _graph(rng, n_in=8, n_gates=120, n_out=6)
-    eng = LogicEngine(n_unit=8, capacity=64)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=64)
     sizes = [40, 33, 10, 64, 1, 17]      # crosses word boundaries freely
     uids = [eng.submit(g, rng.integers(0, 2, (n, 8)).astype(bool))
             for n in sizes]
@@ -230,7 +236,7 @@ def test_slot_recycling_ragged_requests(rng):
 def test_oversized_request_chunks(rng):
     """Requests above capacity split into waves but return one result."""
     g = _graph(rng, n_in=8, n_gates=100, n_out=5)
-    eng = LogicEngine(n_unit=8, capacity=32)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32)
     X = rng.integers(0, 2, (150, 8)).astype(bool)
     out = eng.serve(g, X)
     assert out.shape == (150, 5)
@@ -240,7 +246,7 @@ def test_oversized_request_chunks(rng):
 
 def test_empty_request_completes_immediately(rng):
     g = _graph(rng, n_in=6, n_gates=40, n_out=4)
-    eng = LogicEngine(n_unit=8, capacity=32)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=32)
     uid = eng.submit(g, np.zeros((0, 6), dtype=bool))
     assert eng.idle
     assert eng.result(uid).shape == (0, 4)
@@ -250,7 +256,7 @@ def test_mixed_graph_queues_serve_fifo(rng):
     """Two different graphs queued at once both complete correctly."""
     ga = _graph(rng, n_in=8, n_gates=90, n_out=5)
     gb = _graph(rng, n_in=11, n_gates=140, n_out=7)
-    eng = LogicEngine(n_unit=8, capacity=64)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=64)
     Xa = rng.integers(0, 2, (21, 8)).astype(bool)
     Xb = rng.integers(0, 2, (50, 11)).astype(bool)
     ua, ub = eng.submit(ga, Xa), eng.submit(gb, Xb)
@@ -267,14 +273,14 @@ def test_mixed_graph_queues_serve_fifo(rng):
 def test_partitioned_serving_equivalence(rng):
     """Pipelined multi-program serving == monolithic, bit for bit."""
     g = random_graph(rng, 12, 400, 20, locality=48)
-    eng = LogicEngine(n_unit=16, capacity=96, max_gates=150)
+    eng = LogicEngine(CompileSpec(n_unit=16, max_gates=150), capacity=96)
     # fetch the entry the engine serves (post-optimization key)
-    entry = eng.cache.get(g, 16, "liveness", 150, pipeline=eng.pipeline)
+    entry = eng.cache.get(g, eng.spec)
     assert len(entry.programs) >= 2      # actually partitioned
     X = rng.integers(0, 2, (70, 12)).astype(bool)
     got = eng.serve(g, X)
     assert (got == g.evaluate(X)).all()
-    mono = compile_graph(g, n_unit=16, alloc="liveness")
+    mono = compile_graph(g, CompileSpec(n_unit=16))
     assert (got == logic_infer_bits(mono, X)).all()
     # partitioning shrank the per-program buffer budget (the point of it)
     assert max(p.n_addr for p in entry.programs) < mono.n_addr
@@ -283,11 +289,11 @@ def test_partitioned_serving_equivalence(rng):
 def test_partitioned_and_monolithic_cache_separately(rng):
     g = random_graph(rng, 10, 300, 12, locality=40)
     cache = ProgramCache()
-    mono = cache.get(g, 16, max_gates=None)
-    part = cache.get(g, 16, max_gates=100)
+    mono = cache.get(g, CompileSpec(n_unit=16))
+    part = cache.get(g, CompileSpec(n_unit=16, max_gates=100))
     assert len(mono.programs) == 1 and len(part.programs) >= 2
     assert cache.misses == 2
-    assert cache.get(g, 16, max_gates=100) is part
+    assert cache.get(g, CompileSpec(n_unit=16, max_gates=100)) is part
 
 
 # ---------------------------------------------------------------------------
@@ -297,7 +303,7 @@ def test_partitioned_and_monolithic_cache_separately(rng):
 def test_sharded_path_parity_single_device(rng):
     """shard_map path on the host mesh stays exact (1 device here)."""
     g = _graph(rng)
-    eng = LogicEngine(n_unit=16, capacity=64, shard=True)
+    eng = LogicEngine(CompileSpec(n_unit=16), capacity=64, shard=True)
     assert eng.shard and eng.mesh is not None
     X = rng.integers(0, 2, (45, g.n_inputs)).astype(bool)
     assert (eng.serve(g, X) == g.evaluate(X)).all()
@@ -316,11 +322,12 @@ def test_sharded_parity_multi_device_subprocess():
         "assert len(jax.devices()) == 4;"
         "rng = np.random.default_rng(1);"
         "g = random_graph(rng, 10, 200, 8, locality=32);"
-        "eng = LogicEngine(n_unit=16, words_per_device=1);"
+        "from repro.core.spec import CompileSpec;"
+        "eng = LogicEngine(CompileSpec(n_unit=16), words_per_device=1);"
         "assert eng.shard and eng.capacity == 128;"
         "X = rng.integers(0, 2, (100, 10)).astype(bool);"
         "assert (eng.serve(g, X) == g.evaluate(X)).all();"
-        "eng2 = LogicEngine(n_unit=16, max_gates=80);"
+        "eng2 = LogicEngine(CompileSpec(n_unit=16, max_gates=80));"
         "assert (eng2.serve(g, X) == g.evaluate(X)).all();"
         "print('sharded-ok')"
     )

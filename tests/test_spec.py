@@ -1,0 +1,460 @@
+"""CompileSpec / LogicCompiler: the one declarative compilation target.
+
+Covers the DESIGN.md §8 contracts: validation, functional updates,
+cache-key canonicity (the single cache-keying code path), JSON
+round-trip, the pinned canonical defaults and paper-exact preset, the
+``n_unit="auto"`` design-space resolution, the typed ``LayerLoad``
+search API, and the deprecation shim (old kwargs -> byte-identical
+programs + exactly one warning).
+"""
+import json
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core.compiler import CompiledArtifact, LogicCompiler
+from repro.core.cost_model import CostModel, FfclStats, LayerLoad
+from repro.core.gate_ir import random_graph
+from repro.core.opt import PassManager
+from repro.core.optimizer import binary_search, sweep
+from repro.core.partition import compile_partitions, partition
+from repro.core.scheduler import compile_graph
+from repro.core.spec import CompileSpec, DEPRECATION_PREFIX
+from repro.serve import LogicEngine, ProgramCache
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def _graph(rng, n_in=12, n_gates=300, n_out=10):
+    return random_graph(rng, n_in, n_gates, n_out, locality=48)
+
+
+def _same_streams(a, b) -> bool:
+    return (a.n_addr == b.n_addr and
+            (a.src_a == b.src_a).all() and (a.src_b == b.src_b).all() and
+            (a.dst == b.dst).all() and (a.opcode == b.opcode).all() and
+            (a.output_addrs == b.output_addrs).all())
+
+
+# ---------------------------------------------------------------------------
+# validation + canonical defaults
+# ---------------------------------------------------------------------------
+
+def test_canonical_defaults_pinned():
+    """THE defaults live on CompileSpec (consumers stopped declaring
+    their own): liveness allocation, both scheduler layout knobs on,
+    the default pass pipeline, monolithic."""
+    s = CompileSpec()
+    assert s.n_unit == 64
+    assert s.alloc == "liveness"
+    assert s.opcode_sort is True and s.fuse_levels is True
+    assert s.pipeline == PassManager.default()
+    assert s.max_gates is None
+
+
+def test_paper_exact_preset_pinned():
+    """The paper-faithful target: eq. 23 layout (no fusion, no opcode
+    sort), raw factoring, direct (§6.3 address == wire) allocation."""
+    s = CompileSpec.paper_exact(8)
+    assert s.n_unit == 8
+    assert s.alloc == "direct"
+    assert s.opcode_sort is False and s.fuse_levels is False
+    assert s.pipeline is None and s.optimize == "none"
+    assert s.max_gates is None
+
+
+@pytest.mark.parametrize("bad", [
+    dict(n_unit=0), dict(n_unit=-3), dict(n_unit="many"), dict(n_unit=2.5),
+    dict(n_unit=True), dict(alloc="greedy"), dict(opcode_sort=1),
+    dict(fuse_levels="yes"), dict(max_gates=0), dict(max_gates=-1),
+    dict(max_gates=True), dict(optimize="bogus"), dict(optimize=42),
+])
+def test_validation_rejects(bad):
+    with pytest.raises(ValueError):
+        CompileSpec(**bad)
+
+
+def test_optimize_normalized_at_construction():
+    """Equivalent spellings construct EQUAL specs."""
+    assert CompileSpec(optimize="default") == \
+        CompileSpec(optimize=PassManager.default())
+    assert CompileSpec(optimize=True) == CompileSpec(optimize="default")
+    assert CompileSpec(optimize=None) == CompileSpec(optimize=False) \
+        == CompileSpec(optimize="none")
+    assert CompileSpec(optimize="none").pipeline is None
+    # hashable (usable directly as a dict key)
+    assert {CompileSpec(): 1}[CompileSpec(optimize="default")] == 1
+
+
+def test_with_is_functional():
+    s = CompileSpec(n_unit=16)
+    t = s.with_(n_unit=32, alloc="direct")
+    assert (t.n_unit, t.alloc) == (32, "direct")
+    assert (s.n_unit, s.alloc) == (16, "liveness")   # original untouched
+    with pytest.raises(TypeError):
+        s.with_(n_units=8)                           # typo'd field
+    with pytest.raises(ValueError):
+        s.with_(n_unit=0)                            # updates re-validate
+
+
+# ---------------------------------------------------------------------------
+# cache keying: the single code path
+# ---------------------------------------------------------------------------
+
+def test_cache_key_stable_across_equivalent_constructions():
+    k1 = CompileSpec(n_unit=16, optimize="default").cache_key()
+    k2 = CompileSpec(n_unit=16, optimize=PassManager.default()).cache_key()
+    assert k1 == k2
+    assert CompileSpec(n_unit=16).cache_key() != \
+        CompileSpec(n_unit=32).cache_key()
+    assert CompileSpec(n_unit=16).cache_key() != \
+        CompileSpec(n_unit=16, optimize="none").cache_key()
+    # every stream-shaping knob participates (the old hand-built tuple
+    # silently missed opcode_sort/fuse_levels)
+    assert CompileSpec(n_unit=16).cache_key() != \
+        CompileSpec(n_unit=16, fuse_levels=False).cache_key()
+    assert CompileSpec(n_unit=16).cache_key() != \
+        CompileSpec(n_unit=16, opcode_sort=False).cache_key()
+
+
+def test_cache_key_requires_resolved_n_unit():
+    with pytest.raises(ValueError, match="auto"):
+        CompileSpec(n_unit="auto").cache_key()
+
+
+def test_normalize_unbinding_budget(rng):
+    g = _graph(rng, n_gates=80)
+    s = CompileSpec(n_unit=8, optimize="none", max_gates=400)
+    assert s.normalize(g).max_gates is None          # 80 <= 400
+    assert s.with_(max_gates=30).normalize(g).max_gates == 30
+    assert s.normalize(g).cache_key() == \
+        s.with_(max_gates=None).cache_key()
+
+
+def test_program_cache_key_of_uses_spec_key(rng):
+    """ProgramCache.key_of == (fingerprint, normalized spec.cache_key())
+    — no second keying code path."""
+    g = _graph(rng, n_gates=80)
+    s = CompileSpec(n_unit=8, optimize="none", max_gates=10 ** 6)
+    assert ProgramCache.key_of(g, s) == \
+        (g.fingerprint(), s.normalize(g).cache_key())
+    cache = ProgramCache()
+    entry = cache.get(g, s)
+    assert entry.key == ProgramCache.key_of(g, s)
+
+
+# ---------------------------------------------------------------------------
+# JSON round-trip
+# ---------------------------------------------------------------------------
+
+def test_json_round_trip():
+    for s in (CompileSpec(),
+              CompileSpec(n_unit="auto", max_gates=500),
+              CompileSpec.paper_exact(128),
+              CompileSpec(n_unit=7, alloc="direct", opcode_sort=False,
+                          optimize="none")):
+        d = json.loads(json.dumps(s.to_dict()))     # through real JSON
+        assert CompileSpec.from_dict(d) == s
+
+
+def test_json_rejects_custom_pipeline_and_unknown_keys():
+    custom = PassManager([PassManager.default().passes[0]], name="custom")
+    with pytest.raises(ValueError, match="custom"):
+        CompileSpec(optimize=custom).to_dict()
+    with pytest.raises(ValueError, match="unknown"):
+        CompileSpec.from_dict({"n_units": 8})
+
+
+# ---------------------------------------------------------------------------
+# LayerLoad + search robustness
+# ---------------------------------------------------------------------------
+
+def test_layer_load_tuple_shim(rng):
+    stats = FfclStats.from_graph(_graph(rng))
+    model = CostModel()
+    typed = [LayerLoad(stats, n_copies=4, n_input_vectors=128)]
+    legacy = [(stats, 4, 128)]
+    assert model.network_cycles(typed, 32) == model.network_cycles(legacy, 32)
+    # LayerLoad unpacks like the tuple it replaced
+    st, m, nv = typed[0]
+    assert (st, m, nv) == (stats, 4, 128)
+    with pytest.raises(ValueError):
+        LayerLoad(stats, n_copies=0)
+    with pytest.raises(ValueError):
+        LayerLoad(stats, n_input_vectors=0)
+
+
+def test_binary_search_degenerate_ranges(rng):
+    stats = FfclStats.from_graph(_graph(rng))
+    layers = [LayerLoad(stats, 4, 128)]
+    model = CostModel()
+    for lo, hi in ((1, 1), (1, 2), (1, 3), (4, 5), (7, 7)):
+        res = binary_search(model, layers, n_unit_max=hi, n_unit_min=lo)
+        assert lo <= res.best_n_unit <= hi
+        probed = [u for u, _ in res.evaluations]
+        assert min(probed) >= lo and max(probed) <= hi
+        assert len(probed) == len(set(probed))       # each probe recorded once
+        # degenerate range == exhaustive enumeration
+        exhaustive = sweep(model, layers, list(range(lo, hi + 1)))
+        assert res.best_n_unit == exhaustive.best_n_unit
+    with pytest.raises(ValueError):
+        binary_search(model, layers, n_unit_max=0)
+    with pytest.raises(ValueError):
+        binary_search(model, layers, n_unit_max=4, n_unit_min=5)
+    with pytest.raises(ValueError):
+        binary_search(model, layers, n_unit_max=4, n_unit_min=0)
+    with pytest.raises(ValueError):
+        sweep(model, layers, [])
+
+
+# ---------------------------------------------------------------------------
+# n_unit="auto": the §7.2 search as a spec value
+# ---------------------------------------------------------------------------
+
+def test_auto_n_unit_matches_manual_binary_search(rng):
+    g = _graph(rng, n_gates=500)
+    compiler = LogicCompiler(n_unit_max=512, n_input_vectors=256)
+    spec = CompileSpec(n_unit="auto", optimize="none")
+    art = compiler.compile(g, spec)
+    # the manual workflow the spec value replaces
+    manual = binary_search(CostModel(),
+                           [LayerLoad(FfclStats.from_graph(g), 1, 256)],
+                           n_unit_max=512)
+    assert art.spec.n_unit == manual.best_n_unit
+    assert art.search is not None
+    assert art.search.best_n_unit == manual.best_n_unit
+    assert art.programs[0].n_unit == manual.best_n_unit
+    # compiled artifact still computes the function
+    X = rng.integers(0, 2, (64, g.n_inputs)).astype(bool)
+    assert (art.execute(X) == g.evaluate(X)).all()
+
+
+def test_auto_n_unit_through_engine(rng):
+    """End to end: an auto-spec engine resolves per graph, serves
+    bit-exactly, and cache-keys on the resolved unit count."""
+    g = _graph(rng, n_gates=400)
+    eng = LogicEngine(CompileSpec(n_unit="auto"), capacity=64)
+    X = rng.integers(0, 2, (40, g.n_inputs)).astype(bool)
+    assert (eng.serve(g, X) == g.evaluate(X)).all()
+    (entry,) = eng.cache._entries.values()
+    assert isinstance(entry.spec.n_unit, int)
+    opt_g = eng.cache._optimized(g, eng.spec)
+    manual = binary_search(
+        eng.cache.compiler.model,
+        [LayerLoad(FfclStats.from_graph(opt_g), 1,
+                   eng.cache.compiler.n_input_vectors)],
+        n_unit_max=eng.cache.compiler.n_unit_max)
+    assert entry.spec.n_unit == manual.best_n_unit
+    assert (eng.serve(g, X) == g.evaluate(X)).all()  # cache hit path
+    assert eng.cache.misses == 1 and eng.cache.hits >= 1
+
+
+def test_compile_graph_rejects_auto(rng):
+    with pytest.raises(ValueError, match="LogicCompiler"):
+        compile_graph(_graph(rng), CompileSpec(n_unit="auto"))
+
+
+# ---------------------------------------------------------------------------
+# LogicCompiler: the unified compile path
+# ---------------------------------------------------------------------------
+
+def test_compiler_monolithic_vs_partitioned(rng):
+    g = _graph(rng, n_gates=400)
+    compiler = LogicCompiler()
+    mono = compiler.compile(g, CompileSpec(n_unit=16, optimize="none"))
+    assert isinstance(mono, CompiledArtifact)
+    assert not mono.partitioned and mono.program.n_unit == 16
+    part = compiler.compile(
+        g, CompileSpec(n_unit=16, optimize="none", max_gates=150))
+    assert part.partitioned
+    X = rng.integers(0, 2, (50, g.n_inputs)).astype(bool)
+    want = g.evaluate(X)
+    assert (mono.execute(X) == want).all()
+    assert (part.execute(X) == want).all()
+    with pytest.raises(ValueError):
+        part.program                                  # pipeline, not mono
+    st = part.stats()
+    assert st["n_programs"] == len(part.programs) >= 2
+    assert st["spec"] == part.spec.to_dict()
+
+
+def test_compiler_matches_direct_compile_graph(rng):
+    """The facade's monolithic path emits byte-identical streams to the
+    scheduler primitive (one compile path, not a fourth)."""
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=16)
+    assert _same_streams(LogicCompiler().compile(g, spec).programs[0],
+                         compile_graph(g, spec))
+
+
+def test_partition_accepts_spec(rng):
+    g = _graph(rng, n_gates=400)
+    spec = CompileSpec(max_gates=150, optimize="default")
+    parts = partition(g, spec)
+    assert len(parts) >= 2
+    raw_parts = partition(g, 150)
+    assert [p.output_indices for p in parts] == \
+        [p.output_indices for p in raw_parts]
+    progs = compile_partitions(parts, CompileSpec(n_unit=8))
+    assert all(p.n_unit == 8 for p in progs)
+    with pytest.raises(ValueError, match="max_gates"):
+        partition(g, CompileSpec())                   # budget-less spec
+
+
+# ---------------------------------------------------------------------------
+# deprecation shim: old kwargs still work, warn once, byte-identical
+# ---------------------------------------------------------------------------
+
+def _one_legacy_warning(w):
+    legacy = [i for i in w if issubclass(i.category, DeprecationWarning)
+              and str(i.message).startswith(DEPRECATION_PREFIX)]
+    return len(legacy) == 1
+
+
+def test_shim_compile_graph_byte_identical(rng):
+    g = _graph(rng)
+    new = compile_graph(g, CompileSpec(n_unit=16, alloc="direct",
+                                       fuse_levels=False))
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = compile_graph(g, n_unit=16, alloc="direct", fuse_levels=False)
+    assert _one_legacy_warning(w)
+    assert _same_streams(old, new)
+
+
+def test_shim_legacy_positional_n_unit(rng):
+    g = _graph(rng)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = compile_graph(g, 16)
+    assert _one_legacy_warning(w)
+    assert _same_streams(old, compile_graph(g, CompileSpec(n_unit=16)))
+
+
+def test_shim_unspecified_kwargs_take_canonical_defaults(rng):
+    """The documented default unification: a legacy call now fills the
+    gaps with CompileSpec defaults (liveness + default pipeline), NOT
+    the old per-entry-point ones."""
+    g = _graph(rng)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = compile_graph(g, n_unit=16)
+    assert _one_legacy_warning(w)
+    assert _same_streams(old, compile_graph(g, CompileSpec(n_unit=16)))
+
+
+def test_shim_engine_and_cache_parity(rng):
+    g = _graph(rng)
+    X = rng.integers(0, 2, (30, g.n_inputs)).astype(bool)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old_eng = LogicEngine(n_unit=16, alloc="liveness")
+    assert _one_legacy_warning(w)
+    new_eng = LogicEngine(CompileSpec(n_unit=16))
+    assert old_eng.spec == new_eng.spec
+    assert (old_eng.serve(g, X) == new_eng.serve(g, X)).all()
+
+    cache = ProgramCache()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old_entry = cache.get(g, 16, "liveness", None, pipeline=None)
+    assert _one_legacy_warning(w)
+    new_entry = ProgramCache().get(g, CompileSpec(n_unit=16,
+                                                  optimize="none"))
+    assert old_entry.key == new_entry.key
+    assert _same_streams(old_entry.programs[0], new_entry.programs[0])
+
+
+def test_shim_rejects_mixing_spec_and_kwargs(rng):
+    g = _graph(rng)
+    with pytest.raises(TypeError, match="not both"):
+        compile_graph(g, CompileSpec(n_unit=8), n_unit=16)
+    with pytest.raises(TypeError, match="not both"):
+        LogicEngine(CompileSpec(n_unit=8), alloc="direct")
+
+
+def test_legacy_positional_alloc_rejected_loudly(rng):
+    """The pre-spec 3rd positional was alloc; it must not silently bind
+    to the lv parameter and compile with the wrong allocator."""
+    g = _graph(rng)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        with pytest.raises(TypeError, match="alloc"):
+            compile_graph(g, 16, "direct")
+
+
+def test_classifier_default_engine_honors_budget(rng):
+    """build_classifier's contract: spec.max_gates rides along to the
+    (default) engine backend and partitions the composed stack."""
+    from repro.flow import build_classifier
+    params = {
+        "w0": rng.normal(size=(6, 5)).astype(np.float32),
+        "b0": rng.normal(size=5).astype(np.float32),
+        "w1": rng.normal(size=(5, 2)).astype(np.float32),
+        "b1": np.zeros(2, np.float32),
+    }
+    x = rng.integers(0, 2, (40, 6)).astype(np.uint8)
+    clf = build_classifier(params, 2, x, CompileSpec(n_unit=8, max_gates=2))
+    from repro.flow.classifier import input_bits
+    bits = input_bits(x)
+    ref = clf.hidden_bits(bits, backend="reference")
+    got = clf.hidden_bits(bits, backend="engine")     # default engine
+    assert (got == ref).all()
+    eng = clf._serve_engine()
+    assert eng.max_gates == 2
+    (entry,) = eng.cache._entries.values()
+    assert entry.partitioned                          # budget really bound
+
+
+def test_auto_resolution_memoized_on_hit_path(rng):
+    """Repeat traffic must not re-run the design-space search: after the
+    first request the registry's hot path never touches the compiler."""
+    g = _graph(rng, n_gates=400)
+    eng = LogicEngine(CompileSpec(n_unit="auto"), capacity=64)
+    X = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
+    eng.serve(g, X)
+
+    class _Poison:
+        def resolve(self, *a, **k):
+            raise AssertionError("hit path re-ran the DSE search")
+
+        def compile(self, *a, **k):
+            raise AssertionError("hit path recompiled")
+
+    eng.cache.compiler = _Poison()
+    assert (eng.serve(g, X) == g.evaluate(X)).all()   # memoized resolution
+    assert eng.cache.hits >= 1
+
+
+def test_cross_pipeline_engines_share_entry(rng):
+    """optimize's effect lives in the post-optimization fingerprint, so a
+    default-pipeline engine (raw graph in) and a none-pipeline engine
+    (optimized netlist in) must land on ONE registry entry."""
+    from repro.core.opt import PassManager
+    from repro.serve import ProgramCache
+    g = _graph(rng)
+    g_opt = PassManager.default().run(g).graph
+    cache = ProgramCache()
+    a = LogicEngine(CompileSpec(n_unit=16), capacity=32, cache=cache)
+    b = LogicEngine(CompileSpec(n_unit=16, optimize="none"), capacity=32,
+                    cache=cache)
+    X = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
+    assert (a.serve(g, X) == g.evaluate(X)).all()
+    assert (b.serve(g_opt, X) == g.evaluate(X)).all()
+    assert len(cache) == 1 and cache.misses == 1 and cache.hits >= 1
+
+
+def test_shim_explicit_optimize_none_still_means_none(rng):
+    """optimize=None was a legal old spelling of 'no optimization' and
+    must not fall through to the default pipeline."""
+    g = _graph(rng)
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        old = compile_graph(g, n_unit=16, optimize=None)
+    assert _one_legacy_warning(w)
+    assert _same_streams(
+        old, compile_graph(g, CompileSpec(n_unit=16, optimize="none")))

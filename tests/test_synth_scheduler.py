@@ -9,6 +9,7 @@ from hypothesis import given, settings, strategies as st
 from repro.core.gate_ir import LogicGraph, OpCode, random_graph
 from repro.core.levelize import levelize
 from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.spec import CompileSpec
 from repro.core.synth import dead_gate_elim, optimize, rebalance
 
 
@@ -46,7 +47,8 @@ def test_optimize_preserves_semantics(g):
        st.sampled_from(["direct", "liveness"]))
 def test_program_matches_direct_eval(g, n_unit, alloc):
     X = _vectors(g)
-    prog = compile_graph(g, n_unit=n_unit, alloc=alloc)
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, alloc=alloc,
+                                        optimize="none"))
     assert (execute_program_np(prog, X) == g.evaluate(X)).all()
 
 
@@ -55,7 +57,7 @@ def test_program_matches_direct_eval(g, n_unit, alloc):
 def test_schedule_respects_dependencies(g, n_unit):
     """Every operand of a step was produced at a strictly earlier step (or
     is an input/const), and dst addresses within a step never collide."""
-    prog = compile_graph(g, n_unit=n_unit, alloc="liveness")
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, optimize="none"))
     produced_at = {}
     for a in [0, 1, *prog.input_addrs.tolist()]:
         produced_at[a] = -1
@@ -80,17 +82,21 @@ def test_eq23_subkernel_count(g, n_unit):
     """Paper eq. 23: n_subkernels = sum_l ceil(gates_l / n_unit) for the
     unfused layout; step fusion may only shrink the count."""
     lv = levelize(g)
-    prog = compile_graph(g, n_unit=n_unit, fuse_levels=False)
+    prog = compile_graph(g, CompileSpec(n_unit=n_unit, fuse_levels=False,
+                                        optimize="none"))
     expected = int(np.ceil(lv.histogram() / n_unit).sum())
     assert prog.n_steps == expected
-    assert compile_graph(g, n_unit=n_unit).n_steps <= expected
+    fused = CompileSpec(n_unit=n_unit, optimize="none")
+    assert compile_graph(g, fused).n_steps <= expected
 
 
 @settings(max_examples=25, deadline=None)
 @given(graphs())
 def test_liveness_never_larger(g):
-    d = compile_graph(g, n_unit=8, alloc="direct")
-    lv = compile_graph(g, n_unit=8, alloc="liveness")
+    d = compile_graph(g, CompileSpec(n_unit=8, alloc="direct",
+                                     optimize="none"))
+    lv = compile_graph(g, CompileSpec(n_unit=8, alloc="liveness",
+                                      optimize="none"))
     assert lv.n_addr <= d.n_addr
 
 

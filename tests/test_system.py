@@ -8,6 +8,7 @@ from repro.core.cost_model import CostModel, FfclStats
 from repro.core.nullanet import (BinaryMLPConfig, mlp_to_logic_network,
                                  train_binary_mlp)
 from repro.core.optimizer import binary_search
+from repro.core.spec import CompileSpec
 from repro.core.scheduler import compile_graph
 from repro.data import make_binary_classification
 from repro.kernels.logic_dsp import logic_infer_bits
@@ -22,7 +23,7 @@ def test_paper_pipeline_micro():
     params = train_binary_mlp(cfg, xt, yt, steps=150)
     net = mlp_to_logic_network(params, cfg, xt, mode="isf")
 
-    progs = [compile_graph(g, n_unit=8, alloc="liveness")
+    progs = [compile_graph(g, CompileSpec(n_unit=8))
              for g in net.graphs]
 
     def kernel_exec(graph, bits):
