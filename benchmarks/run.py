@@ -297,6 +297,72 @@ def bench_serve_logic(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# serving front door under load: admission, deadlines, shedding (serve/)
+# ---------------------------------------------------------------------------
+
+def bench_serve_traffic(quick: bool) -> None:
+    """``serve.traffic.*`` rows: the front door driven closed-loop by a
+    two-tenant Poisson + heavy-tail (Pareto) trace.  ``us`` on the
+    latency rows is the percentile itself; shed/deadline-miss rows are
+    ``derived``-only rates.  Schema in benchmarks/README.md."""
+    import asyncio
+
+    from repro.serve import (FrontDoor, Priority, TrafficPattern,
+                             build_trace, run_trace)
+
+    rng = np.random.default_rng(5)
+    g_a = random_graph(rng, 16, 300 if quick else 800, 10, locality=64)
+    g_b = random_graph(rng, 12, 200 if quick else 500, 8, locality=64)
+    spec = CompileSpec(n_unit=32)
+    n = 60 if quick else 200
+    trace = build_trace([
+        TrafficPattern(tenant="vision", rate_rps=150.0, n_requests=n,
+                       size_mean=40, deadline_s=0.5,
+                       priority_mix=((Priority.HIGH, 0.2),
+                                     (Priority.NORMAL, 0.8))),
+        TrafficPattern(tenant="ranking", rate_rps=100.0, n_requests=n,
+                       arrival="pareto", pareto_alpha=1.4,
+                       size_mean=24, deadline_s=0.5,
+                       priority_mix=((Priority.NORMAL, 0.5),
+                                     (Priority.BATCH, 0.5))),
+    ], seed=11)
+
+    async def drive():
+        door = FrontDoor(spec=spec, capacity=128, max_queue=24,
+                         default_deadline_s=0.5)
+        door.register("vision", g_a, max_inflight=8)
+        door.register("ranking", g_b, max_inflight=8)
+        async with door:
+            # warm compile/jit caches and the admission controller's
+            # wave-time window so the trace measures serving, not cold
+            # starts
+            for _ in range(5):
+                for name, g in (("vision", g_a), ("ranking", g_b)):
+                    bits = rng.integers(0, 2, (48, g.n_inputs)).astype(bool)
+                    await door.submit(name, bits, deadline_s=30.0)
+            door.reset_metrics()
+            report = await run_trace(door, trace, seed=13)
+        return report, door.metrics()
+
+    report, m = asyncio.run(drive())
+    sheds = " ".join(f"{k}={v}" for k, v in
+                     sorted(report.shed_by_code.items()))
+    row("serve.traffic.p50", report.p50_ms * 1e3 if report.p50_ms else 0.0,
+        f"completed={report.completed} offered={report.offered}", spec=spec)
+    row("serve.traffic.p99", report.p99_ms * 1e3 if report.p99_ms else 0.0,
+        f"wave_est_ms={m['wave_est_ms']:.2f}", spec=spec)
+    row("serve.traffic.goodput", 0.0,
+        f"samples_per_s={report.goodput_sps:.0f} "
+        f"elapsed_s={report.elapsed_s:.2f}", spec=spec)
+    row("serve.traffic.shed_rate", 0.0,
+        f"rate={report.shed_rate:.4f} shed={report.shed}"
+        + (f" {sheds}" if sheds else ""), spec=spec)
+    row("serve.traffic.deadline_miss", 0.0,
+        f"rate={report.deadline_miss_rate:.4f} "
+        f"missed={report.deadline_missed} retries={m['retries']}", spec=spec)
+
+
+# ---------------------------------------------------------------------------
 # end-to-end NullaNet classifier flow (flow/): train -> FFCL -> serve -> acc
 # ---------------------------------------------------------------------------
 
@@ -468,6 +534,7 @@ def main() -> None:
     bench_opt(args.quick)
     bench_kernels(args.quick)
     bench_serve_logic(args.quick)
+    bench_serve_traffic(args.quick)
     bench_flow_e2e(args.quick)
     print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")
     if args.json:

@@ -7,6 +7,10 @@
 # target, and LogicCompiler is the one facade that turns (graph, spec)
 # into a CompiledArtifact.
 from repro.core.compiler import CompiledArtifact, LogicCompiler
+from repro.core.errors import (CompileError, PermanentCompileError,
+                               TransientCompileError, is_transient)
 from repro.core.spec import CompileSpec
 
-__all__ = ["CompileSpec", "CompiledArtifact", "LogicCompiler"]
+__all__ = ["CompileSpec", "CompiledArtifact", "LogicCompiler",
+           "CompileError", "TransientCompileError",
+           "PermanentCompileError", "is_transient"]

@@ -122,11 +122,17 @@ class LogicCompiler:
 
     def __init__(self, model: CostModel | None = None,
                  n_unit_max: int = 4096, n_unit_min: int = 1,
-                 n_input_vectors: int = 1024):
+                 n_input_vectors: int = 1024, fault_hook=None):
         self.model = model or CostModel()
         self.n_unit_max = n_unit_max
         self.n_unit_min = n_unit_min
         self.n_input_vectors = n_input_vectors
+        # Optional ``hook(graph, spec)`` called at the top of every
+        # :meth:`compile` — the seam fault injection uses to raise a
+        # :class:`~repro.core.errors.TransientCompileError` with seeded
+        # determinism (serve.frontdoor.FaultPolicy) so retry paths are
+        # testable.  ``None`` (default) costs one attribute check.
+        self.fault_hook = fault_hook
 
     # -- n_unit="auto" ------------------------------------------------------
 
@@ -168,6 +174,8 @@ class LogicCompiler:
         — re-running the pipeline would be pure waste).
         """
         spec = spec if spec is not None else CompileSpec()
+        if self.fault_hook is not None:
+            self.fault_hook(graph, spec)
         t0 = time.perf_counter()
         pipeline = spec.pipeline
         g = graph if (assume_optimized or pipeline is None) \

@@ -3,7 +3,17 @@ from repro.serve.engine import (DecodeCache, init_decode_cache, prefill,
 from repro.serve.batcher import Request, RequestBatcher, SlotTable
 from repro.serve.logic_engine import (CompiledEntry, LogicEngine,
                                       LogicRequest, ProgramCache)
+from repro.serve.frontdoor import (FaultPolicy, FrontDoor, Priority,
+                                   RequestRejected, ShedReason, SHED_CODES,
+                                   Tenant)
+from repro.serve.traffic import (TrafficPattern, TrafficReport,
+                                 TrafficRequest, build_trace, run_trace,
+                                 run_trace_sync)
 
 __all__ = ["DecodeCache", "init_decode_cache", "prefill", "decode_step",
            "RequestBatcher", "Request", "SlotTable",
-           "LogicEngine", "LogicRequest", "ProgramCache", "CompiledEntry"]
+           "LogicEngine", "LogicRequest", "ProgramCache", "CompiledEntry",
+           "FrontDoor", "FaultPolicy", "Priority", "RequestRejected",
+           "ShedReason", "SHED_CODES", "Tenant",
+           "TrafficPattern", "TrafficReport", "TrafficRequest",
+           "build_trace", "run_trace", "run_trace_sync"]

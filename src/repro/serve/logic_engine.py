@@ -38,6 +38,7 @@ fixed-shape invocation at maximum word occupancy.
 """
 from __future__ import annotations
 
+import threading
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable
@@ -169,6 +170,15 @@ class ProgramCache:
                  compiler: LogicCompiler | None = None):
         self.max_entries = max_entries
         self.compiler = compiler or LogicCompiler()
+        # One reentrant lock serializes get/peek/evict and both memos:
+        # engines sharing a cache from threads (the front door steps the
+        # engine in an executor; the artifact-store warmers will too)
+        # must not race LRU eviction against entry construction.
+        # Compilation runs UNDER the lock — a duplicate concurrent miss
+        # would compile the same program twice and momentarily double
+        # device memory, which is worse than briefly serializing misses
+        # (hits only touch an OrderedDict move_to_end).
+        self._lock = threading.RLock()
         self._entries: OrderedDict[tuple, CompiledEntry] = OrderedDict()
         # (raw fingerprint, spec.optimize_key) -> optimized LogicGraph;
         # LRU-bounded looser than the entries (graphs are cheap next to
@@ -183,6 +193,7 @@ class ProgramCache:
         self._auto_memo: OrderedDict[object, int] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.compile_failures = 0
 
     @property
     def _opt_memo_bound(self) -> int | None:
@@ -194,23 +205,26 @@ class ProgramCache:
         if pipeline is None:
             return graph
         memo_key = (graph.fingerprint(), spec.optimize_key)
-        cached = self._opt_memo.get(memo_key)
-        if cached is not None:
-            self._opt_memo.move_to_end(memo_key)
-            return cached
-        opt = pipeline.run(graph).graph
-        self._opt_memo[memo_key] = opt
-        bound = self._opt_memo_bound
-        if bound is not None:
-            while len(self._opt_memo) > bound:
-                self._opt_memo.popitem(last=False)
-        return opt
+        with self._lock:
+            cached = self._opt_memo.get(memo_key)
+            if cached is not None:
+                self._opt_memo.move_to_end(memo_key)
+                return cached
+            opt = pipeline.run(graph).graph
+            self._opt_memo[memo_key] = opt
+            bound = self._opt_memo_bound
+            if bound is not None:
+                while len(self._opt_memo) > bound:
+                    self._opt_memo.popitem(last=False)
+            return opt
 
     def __len__(self) -> int:
-        return len(self._entries)
+        with self._lock:
+            return len(self._entries)
 
     def __contains__(self, key: tuple) -> bool:
-        return key in self._entries
+        with self._lock:
+            return key in self._entries
 
     @staticmethod
     def key_of(graph: LogicGraph, spec: CompileSpec | int | None = None,
@@ -235,7 +249,28 @@ class ProgramCache:
 
     def peek(self, key: tuple) -> CompiledEntry | None:
         """Entry for ``key`` without compiling, counting, or LRU-touching."""
-        return self._entries.get(key)
+        with self._lock:
+            return self._entries.get(key)
+
+    def evict(self, key: tuple | None = None) -> tuple | None:
+        """Drop one entry (programs + device arrays + runners together).
+
+        ``key=None`` evicts the least-recently-used entry — the knob
+        fault injection (``serve.frontdoor.FaultPolicy.evict_rate``)
+        turns to simulate an eviction storm; a concrete ``key`` drops
+        that entry (e.g. to force a recompile after an external
+        invalidation). Returns the evicted key, or ``None`` when there
+        was nothing to evict.  Engines with queued requests for an
+        evicted entry recompile from the retained graph
+        (:meth:`LogicEngine.step`) — eviction never wedges a queue.
+        """
+        with self._lock:
+            if key is None:
+                if not self._entries:
+                    return None
+                key, _ = self._entries.popitem(last=False)
+                return key
+            return key if self._entries.pop(key, None) is not None else None
 
     def get(self, graph: LogicGraph, spec: CompileSpec | int | None = None,
             alloc=_UNSET, max_gates=_UNSET, *, n_unit=_UNSET,
@@ -254,29 +289,39 @@ class ProgramCache:
         """
         spec = _resolve_cache_spec(spec, alloc, max_gates, n_unit, pipeline,
                                    caller="ProgramCache.get")
-        graph = self._optimized(graph, spec)
-        spec = self._resolved(graph, spec)
-        # normalize BEFORE compiling so the artifact's recorded spec is
-        # exactly what the key names (an unbinding budget keys — and
-        # records — as None; optimize strips to "none" because its whole
-        # effect lives in the post-optimization fingerprint — see
-        # :meth:`key_of` — and ``assume_optimized`` below means the
-        # facade never re-runs it anyway)
-        spec = spec.normalize(graph).with_(optimize="none")
-        key = (graph.fingerprint(), spec.cache_key())
-        entry = self._entries.get(key)
-        if entry is not None:
-            self.hits += 1
-            self._entries.move_to_end(key)
+        with self._lock:
+            graph = self._optimized(graph, spec)
+            spec = self._resolved(graph, spec)
+            # normalize BEFORE compiling so the artifact's recorded spec
+            # is exactly what the key names (an unbinding budget keys —
+            # and records — as None; optimize strips to "none" because
+            # its whole effect lives in the post-optimization
+            # fingerprint — see :meth:`key_of` — and
+            # ``assume_optimized`` below means the facade never re-runs
+            # it anyway)
+            spec = spec.normalize(graph).with_(optimize="none")
+            key = (graph.fingerprint(), spec.cache_key())
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.misses += 1
+            try:
+                artifact = self.compiler.compile(graph, spec,
+                                                 assume_optimized=True)
+            except Exception:
+                # a failed compile leaves no entry behind: the next
+                # attempt (the front door's retry-with-backoff on
+                # transient failures) recompiles from scratch
+                self.compile_failures += 1
+                raise
+            entry = CompiledEntry(key=key, artifact=artifact)
+            self._entries[key] = entry
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
             return entry
-        self.misses += 1
-        artifact = self.compiler.compile(graph, spec, assume_optimized=True)
-        entry = CompiledEntry(key=key, artifact=artifact)
-        self._entries[key] = entry
-        if self.max_entries is not None:
-            while len(self._entries) > self.max_entries:
-                self._entries.popitem(last=False)
-        return entry
 
     def _resolved(self, graph: LogicGraph, spec: CompileSpec) -> CompileSpec:
         """Resolve ``n_unit="auto"`` for ``graph`` (memoized): repeat
@@ -286,25 +331,28 @@ class ProgramCache:
         # the search depends only on the (post-opt) graph stats and the
         # cache's one compiler, so the structure alone keys the memo
         memo_key = graph.fingerprint()
-        n_unit = self._auto_memo.get(memo_key)
-        if n_unit is None:
-            resolved, _ = self.compiler.resolve(graph, spec,
-                                                assume_optimized=True)
-            n_unit = resolved.n_unit
-            self._auto_memo[memo_key] = n_unit
-            bound = self._opt_memo_bound
-            if bound is not None:
-                while len(self._auto_memo) > bound:
-                    self._auto_memo.popitem(last=False)
-        else:
-            self._auto_memo.move_to_end(memo_key)
+        with self._lock:
+            n_unit = self._auto_memo.get(memo_key)
+            if n_unit is None:
+                resolved, _ = self.compiler.resolve(graph, spec,
+                                                    assume_optimized=True)
+                n_unit = resolved.n_unit
+                self._auto_memo[memo_key] = n_unit
+                bound = self._opt_memo_bound
+                if bound is not None:
+                    while len(self._auto_memo) > bound:
+                        self._auto_memo.popitem(last=False)
+            else:
+                self._auto_memo.move_to_end(memo_key)
         return spec.with_(n_unit=n_unit)
 
     def stats(self) -> dict:
-        return {"entries": len(self._entries), "hits": self.hits,
-                "misses": self.misses,
-                "programs": sum(len(e.programs)
-                                for e in self._entries.values())}
+        with self._lock:
+            return {"entries": len(self._entries), "hits": self.hits,
+                    "misses": self.misses,
+                    "compile_failures": self.compile_failures,
+                    "programs": sum(len(e.programs)
+                                    for e in self._entries.values())}
 
 
 # ---------------------------------------------------------------------------
@@ -424,7 +472,14 @@ class LogicEngine:
         self.max_retained = max_retained
         self._queues: OrderedDict[tuple, deque[_Chunk]] = OrderedDict()
         self._requests: dict[int, LogicRequest] = {}
+        # Unclaimed completed requests: `_retained` is the O(1)
+        # membership truth (claiming = one set.discard), `_finished_order`
+        # only remembers FIFO age for the max_retained trim. Claimed uids
+        # become stale deque entries compacted lazily — never an O(n)
+        # deque.remove on the claim path (high-churn front-door traffic
+        # claims every result).
         self._finished_order: deque[int] = deque()
+        self._retained: set[int] = set()
         self._next_uid = 0
         # execution-config key for per-engine runners on shared cache
         # entries: two engines only share a trace when every knob that
@@ -528,13 +583,29 @@ class LogicEngine:
 
     def _retire(self, uid: int) -> None:
         """Track a completed request; drop the oldest unclaimed results
-        beyond ``max_retained`` (already-claimed uids fall through)."""
+        beyond ``max_retained`` (already-claimed uids are stale deque
+        entries and don't count against the bound)."""
         self._finished_order.append(uid)
+        self._retained.add(uid)
         if self.max_retained is None:
             return
-        while len(self._finished_order) > self.max_retained:
+        while len(self._retained) > self.max_retained:
             old = self._finished_order.popleft()
-            self._requests.pop(old, None)
+            if old in self._retained:       # stale (claimed) uids skip
+                self._retained.discard(old)
+                self._requests.pop(old, None)
+
+    def _compact_finished(self) -> None:
+        """Lazy compaction of claimed uids out of ``_finished_order``:
+        amortized O(1) per claim — pop the stale head run, and rebuild
+        outright once stale entries outnumber live ones (bounds deque
+        memory under claim-newest-first patterns where the stale run
+        never reaches the head)."""
+        order, retained = self._finished_order, self._retained
+        while order and order[0] not in retained:
+            order.popleft()
+        if len(order) > 2 * len(retained) + 8:
+            self._finished_order = deque(u for u in order if u in retained)
 
     def step(self) -> list[int]:
         """One invocation wave: admit, execute, scatter back, recycle.
@@ -601,10 +672,11 @@ class LogicEngine:
             raise RuntimeError(f"request {uid} still in flight")
         if pop:
             del self._requests[uid]
-            try:        # claimed results leave the retention window, so
-                self._finished_order.remove(uid)   # max_retained counts
-            except ValueError:                     # only UNCLAIMED ones
-                pass
+            # claimed results leave the retention window (max_retained
+            # counts only UNCLAIMED ones): O(1) set discard, the deque
+            # entry goes stale and is compacted lazily
+            self._retained.discard(uid)
+            self._compact_finished()
         return req.result
 
     def drain(self) -> None:

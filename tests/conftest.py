@@ -8,6 +8,16 @@ import numpy as np
 import pytest
 
 
+def pytest_configure(config):
+    # Default per-test timeout when pytest-timeout is installed (it is
+    # in requirements-dev.txt / CI): a hung front-door dispatcher or
+    # deadlocked wave fails in 120s instead of wedging the whole run.
+    # Individual tests can still override with @pytest.mark.timeout.
+    if (config.pluginmanager.hasplugin("timeout")
+            and not getattr(config.option, "timeout", None)):
+        config.option.timeout = 120.0
+
+
 @pytest.fixture
 def rng():
     return np.random.default_rng(0)
