@@ -297,6 +297,55 @@ def bench_serve_logic(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# fleet warm start: cold compile vs artifact-store load vs in-memory hit
+# ---------------------------------------------------------------------------
+
+def bench_warm_start(quick: bool) -> None:
+    """``serve.warm_start.*`` rows: what the artifact store buys a fresh
+    serving process.  Three ``ProgramCache.get`` latencies for the SAME
+    (graph, spec): a cold cache with no store (full compile), a cold
+    cache over a populated store (verified load), and a warm in-memory
+    repeat (registry hit).  Counter-pinned — the store row asserts zero
+    compiles — so a silent fallback-to-compile can never masquerade as
+    a fast load.  Schema in benchmarks/README.md."""
+    import tempfile
+
+    from repro.core.artifact_store import ArtifactStore
+    from repro.serve import ProgramCache
+
+    rng = np.random.default_rng(9)
+    g = random_graph(rng, 32, 1200 if quick else 3000, 16, locality=128)
+    spec = CompileSpec(n_unit=64)
+    reps = 3 if quick else 5
+
+    def timed_get(cache):
+        t0 = time.perf_counter()
+        cache.get(g, spec)
+        return time.perf_counter() - t0
+
+    cold = min(timed_get(ProgramCache()) for _ in range(reps))
+
+    with tempfile.TemporaryDirectory(prefix="bench-warm-") as root:
+        ProgramCache(store=ArtifactStore(root)).get(g, spec)   # publish
+        loads, warm_cache = [], None
+        for _ in range(reps):
+            warm_cache = ProgramCache(store=ArtifactStore(root))
+            loads.append(timed_get(warm_cache))
+        load = min(loads)
+        st = warm_cache.stats()
+        assert st["compiles"] == 0 and st["store_hits"] == 1, st
+        hit = min(timed_get(warm_cache) for _ in range(reps))
+
+    row("serve.warm_start.cold_compile", cold * 1e6,
+        f"gates={g.n_gates}", spec=spec)
+    row("serve.warm_start.store_load", load * 1e6,
+        f"vs_cold={cold / max(load, 1e-9):.1f}x compiles=0 store_hits=1",
+        spec=spec)
+    row("serve.warm_start.memory_hit", hit * 1e6,
+        f"vs_cold={cold / max(hit, 1e-9):.0f}x", spec=spec)
+
+
+# ---------------------------------------------------------------------------
 # serving front door under load: admission, deadlines, shedding (serve/)
 # ---------------------------------------------------------------------------
 
@@ -534,6 +583,7 @@ def main() -> None:
     bench_opt(args.quick)
     bench_kernels(args.quick)
     bench_serve_logic(args.quick)
+    bench_warm_start(args.quick)
     bench_serve_traffic(args.quick)
     bench_flow_e2e(args.quick)
     print(f"# total {time.time() - t0:.1f}s, {len(ROWS)} rows")

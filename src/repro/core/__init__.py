@@ -6,11 +6,16 @@
 # package root: one CompileSpec value describes the full compilation
 # target, and LogicCompiler is the one facade that turns (graph, spec)
 # into a CompiledArtifact.
+from repro.core.artifact_store import (ArtifactStore, FORMAT_VERSION,
+                                       alias_key, store_key)
 from repro.core.compiler import CompiledArtifact, LogicCompiler
-from repro.core.errors import (CompileError, PermanentCompileError,
-                               TransientCompileError, is_transient)
+from repro.core.errors import (ArtifactIntegrityError, CompileError,
+                               PermanentCompileError, TransientCompileError,
+                               is_transient)
 from repro.core.spec import CompileSpec
 
 __all__ = ["CompileSpec", "CompiledArtifact", "LogicCompiler",
+           "ArtifactStore", "ArtifactIntegrityError", "FORMAT_VERSION",
+           "store_key", "alias_key",
            "CompileError", "TransientCompileError",
            "PermanentCompileError", "is_transient"]

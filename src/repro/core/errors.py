@@ -21,6 +21,14 @@ react differently to each — retry, reject, or crash loudly:
     with a machine-readable ``compile_failed`` reason instead of
     burning its deadline on retries.
 
+``ArtifactIntegrityError``
+    A ``PermanentCompileError`` specific to the persistence layer
+    (core/artifact_store.py): a store entry failed verification —
+    checksum, format-version, fingerprint, or spec mismatch.  Loud by
+    design (a silently-wrong compiled program is the worst possible
+    failure); the store quarantines the entry and ``ProgramCache``
+    falls back to a clean compile.
+
 :func:`is_transient` is the one classification point: retry loops ask
 it instead of isinstance-matching, so new retryable subclasses (or a
 third-party exception taught to carry ``retryable = True``) slot in
@@ -45,6 +53,18 @@ class PermanentCompileError(CompileError):
     """Compilation failed and retrying cannot help."""
 
     retryable = False
+
+
+class ArtifactIntegrityError(PermanentCompileError):
+    """A persisted compiled artifact failed verification.
+
+    Raised by :mod:`repro.core.artifact_store` on any checksum /
+    format-version / fingerprint / spec mismatch.  Carries
+    ``quarantine_path`` (set by the store) pointing at where the
+    offending entry was moved for post-mortem, or ``None`` when another
+    process quarantined it first."""
+
+    quarantine_path = None
 
 
 def is_transient(exc: BaseException) -> bool:

@@ -85,9 +85,45 @@ class LogicProgram:
     n_unit: int
     name: str = "ffcl"
 
+    #: array-valued fields, in the canonical serialization order — the
+    #: persistence contract of core/artifact_store.py (DESIGN.md §10):
+    #: a payload round-trip must reproduce every one byte-identically.
+    ARRAY_FIELDS = ("src_a", "src_b", "dst", "opcode", "step_opcode",
+                    "homogeneous", "input_addrs", "output_addrs",
+                    "level_of_step")
+    #: scalar/metadata fields riding in the (JSON) manifest side.
+    SCALAR_FIELDS = ("n_addr", "trash_addr", "n_inputs", "n_outputs",
+                     "n_gates", "depth", "n_unit", "name")
+
     @property
     def n_steps(self) -> int:
         return int(self.src_a.shape[0])
+
+    # -- persistence payload (core/artifact_store.py) -----------------------
+
+    def to_payload(self) -> tuple[dict, dict]:
+        """``(arrays, scalars)`` split of the program: arrays keep their
+        exact dtypes (npz side), scalars are JSON-safe (manifest side).
+        Exact inverse of :meth:`from_payload`."""
+        arrays = {f: getattr(self, f) for f in self.ARRAY_FIELDS}
+        scalars = {f: getattr(self, f) for f in self.SCALAR_FIELDS}
+        return arrays, scalars
+
+    @classmethod
+    def from_payload(cls, arrays: dict, scalars: dict) -> "LogicProgram":
+        """Rebuild a program from :meth:`to_payload` output.  Unknown or
+        missing fields raise (``KeyError``/``TypeError``) rather than
+        defaulting — a persistence layer must never guess at streams."""
+        kw = {f: np.asarray(arrays[f]) for f in cls.ARRAY_FIELDS}
+        for f in cls.SCALAR_FIELDS:
+            v = scalars[f]
+            kw[f] = str(v) if f == "name" else int(v)
+        extra = (set(arrays) - set(cls.ARRAY_FIELDS)) | \
+            (set(scalars) - set(cls.SCALAR_FIELDS))
+        if extra:
+            raise TypeError(f"unknown LogicProgram payload fields: "
+                            f"{sorted(extra)}")
+        return cls(**kw)
 
     @property
     def n_subkernels(self) -> int:

@@ -9,9 +9,10 @@ from repro.serve.frontdoor import (FaultPolicy, FrontDoor, Priority,
 from repro.serve.traffic import (TrafficPattern, TrafficReport,
                                  TrafficRequest, build_trace, run_trace,
                                  run_trace_sync)
+from repro.core.artifact_store import ArtifactStore
 
 __all__ = ["DecodeCache", "init_decode_cache", "prefill", "decode_step",
-           "RequestBatcher", "Request", "SlotTable",
+           "RequestBatcher", "Request", "SlotTable", "ArtifactStore",
            "LogicEngine", "LogicRequest", "ProgramCache", "CompiledEntry",
            "FrontDoor", "FaultPolicy", "Priority", "RequestRejected",
            "ShedReason", "SHED_CODES", "Tenant",

@@ -56,6 +56,7 @@ from enum import IntEnum
 
 import numpy as np
 
+from repro.core.artifact_store import ArtifactStore
 from repro.core.errors import TransientCompileError, is_transient
 from repro.core.gate_ir import LogicGraph
 from repro.core.spec import CompileSpec
@@ -220,8 +221,11 @@ class FrontDoor:
         ``capacity`` when omitted).  The engine's ``ProgramCache`` is
         shared by every tenant; per-engine runner keying plus uid-routed
         results keep tenants isolated.
-      spec / capacity: engine construction knobs when ``engine`` is
-        omitted.
+      spec / capacity / store: engine construction knobs when ``engine``
+        is omitted (``store`` warm-starts the door's ProgramCache from a
+        shared artifact-store directory — a fresh front-door process
+        serves its first request with zero compiles when the store was
+        precompiled, e.g. by ``tools/precompile.py``).
       max_queue: bound on queued (admitted, undispatched) requests
         across all tenants — beyond it arrivals shed ``queue_full``
         unless they can displace a strictly lower-priority victim.
@@ -238,6 +242,7 @@ class FrontDoor:
 
     def __init__(self, engine: LogicEngine | None = None, *,
                  spec: CompileSpec | None = None, capacity: int = 256,
+                 store: ArtifactStore | None = None,
                  max_queue: int = 64, default_deadline_s: float = 1.0,
                  max_retries: int = 3, backoff_s: float = 0.002,
                  backoff_cap_s: float = 0.05,
@@ -245,8 +250,13 @@ class FrontDoor:
                  dispatch_batch: int = 16):
         if max_queue < 1:
             raise ValueError("max_queue must be >= 1")
+        if engine is not None and store is not None:
+            raise ValueError(
+                "store backs the door-owned engine; attach an "
+                "ArtifactStore to the shared engine's ProgramCache at its "
+                "own construction instead")
         self.engine = engine if engine is not None else \
-            LogicEngine(spec, capacity=capacity)
+            LogicEngine(spec, capacity=capacity, store=store)
         self.max_queue = max_queue
         self.default_deadline_s = default_deadline_s
         self.max_retries = max_retries

@@ -39,6 +39,7 @@ fixed-shape invocation at maximum word occupancy.
 from __future__ import annotations
 
 import threading
+import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
 from typing import Callable
@@ -49,7 +50,9 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
+from repro.core.artifact_store import ArtifactStore
 from repro.core.compiler import CompiledArtifact, LogicCompiler
+from repro.core.errors import PermanentCompileError
 from repro.core.gate_ir import LogicGraph
 from repro.core.packing import WORD_BITS
 from repro.core.scheduler import LogicProgram
@@ -167,9 +170,16 @@ class ProgramCache:
     """
 
     def __init__(self, max_entries: int | None = None,
-                 compiler: LogicCompiler | None = None):
+                 compiler: LogicCompiler | None = None,
+                 store: ArtifactStore | None = None):
         self.max_entries = max_entries
         self.compiler = compiler or LogicCompiler()
+        # Optional durable backing (core/artifact_store.py): an
+        # in-memory miss consults the store BEFORE compiling (fleet warm
+        # start — a fresh process serves its first request with zero
+        # compiles from a populated store), and a compile writes through
+        # so sibling processes never repeat it.
+        self.store = store
         # One reentrant lock serializes get/peek/evict and both memos:
         # engines sharing a cache from threads (the front door steps the
         # engine in an executor; the artifact-store warmers will too)
@@ -193,7 +203,15 @@ class ProgramCache:
         self._auto_memo: OrderedDict[object, int] = OrderedDict()
         self.hits = 0
         self.misses = 0
+        self.compiles = 0           # actual compiler invocations (a miss
+        #                             served from the store never compiles
+        #                             — warm-start tests pin this to 0)
         self.compile_failures = 0
+        self.store_hits = 0         # misses satisfied by a verified load
+        self.store_misses = 0       # store consulted, no entry published
+        self.store_failures = 0     # corrupt entry: quarantined, recompiled
+        self.store_saves = 0        # write-through persists after compile
+        self.store_save_failures = 0
 
     @property
     def _opt_memo_bound(self) -> int | None:
@@ -290,6 +308,10 @@ class ProgramCache:
         spec = _resolve_cache_spec(spec, alloc, max_gates, n_unit, pipeline,
                                    caller="ProgramCache.get")
         with self._lock:
+            raw_fp, req_spec = graph.fingerprint(), spec
+            entry = self._alias_fast_path(graph, raw_fp, spec)
+            if entry is not None:
+                return entry
             graph = self._optimized(graph, spec)
             spec = self._resolved(graph, spec)
             # normalize BEFORE compiling so the artifact's recorded spec
@@ -307,21 +329,131 @@ class ProgramCache:
                 self._entries.move_to_end(key)
                 return entry
             self.misses += 1
-            try:
-                artifact = self.compiler.compile(graph, spec,
-                                                 assume_optimized=True)
-            except Exception:
-                # a failed compile leaves no entry behind: the next
-                # attempt (the front door's retry-with-backoff on
-                # transient failures) recompiles from scratch
-                self.compile_failures += 1
-                raise
+            artifact = self._store_load(graph.fingerprint(), spec)
+            if artifact is None:
+                try:
+                    self.compiles += 1
+                    artifact = self.compiler.compile(graph, spec,
+                                                     assume_optimized=True)
+                except Exception:
+                    # a failed compile leaves no entry behind: the next
+                    # attempt (the front door's retry-with-backoff on
+                    # transient failures) recompiles from scratch
+                    self.compile_failures += 1
+                    raise
+                self._store_save(artifact, raw_fp, req_spec)
             entry = CompiledEntry(key=key, artifact=artifact)
             self._entries[key] = entry
             if self.max_entries is not None:
                 while len(self._entries) > self.max_entries:
                     self._entries.popitem(last=False)
             return entry
+
+    def _alias_fast_path(self, graph: LogicGraph, raw_fp: str,
+                         spec: CompileSpec) -> CompiledEntry | None:
+        """Warm start WITHOUT the pass pipeline: on first contact with a
+        raw structure, resolve ``(raw fingerprint, requested spec)``
+        through the store's alias records straight to the verified
+        canonical artifact — skipping the optimizer run the canonical
+        (post-opt) address would otherwise force, which is the dominant
+        cold-start cost for ``optimize="default"`` specs.
+
+        ``None`` falls through to the normal path: no store, nothing to
+        skip (``optimize="none"`` — the canonical lookup covers it),
+        structure already seen in this process (the opt memo makes the
+        normal path O(1)), a custom pipeline (no declarative identity),
+        an alias miss, or a corrupt alias (counted, quarantined at the
+        store layer, recompiled here)."""
+        if self.store is None or spec.pipeline is None:
+            return None
+        if (raw_fp, spec.optimize_key) in self._opt_memo:
+            return None
+        try:
+            spec.to_dict()
+        except ValueError:
+            return None
+        try:
+            artifact = self.store.load_alias(raw_fp, spec)
+        except PermanentCompileError:
+            self.store_failures += 1
+            return None
+        if artifact is None:
+            return None
+        # seed the memos the normal path would have filled, so repeat
+        # requests for this structure never leave memory
+        opt_fp = artifact.graph.fingerprint()
+        self._opt_memo[(raw_fp, spec.optimize_key)] = artifact.graph
+        bound = self._opt_memo_bound
+        if bound is not None:
+            while len(self._opt_memo) > bound:
+                self._opt_memo.popitem(last=False)
+        if not spec.resolved:
+            self._auto_memo[opt_fp] = artifact.spec.n_unit
+        key = (opt_fp, artifact.spec.cache_key())
+        entry = self._entries.get(key)
+        if entry is not None:       # admitted meanwhile via another raw form
+            self.hits += 1
+            self._entries.move_to_end(key)
+            return entry
+        self.misses += 1
+        self.store_hits += 1
+        entry = CompiledEntry(key=key, artifact=artifact)
+        self._entries[key] = entry
+        if self.max_entries is not None:
+            while len(self._entries) > self.max_entries:
+                self._entries.popitem(last=False)
+        return entry
+
+    def _store_load(self, fingerprint: str, spec: CompileSpec
+                    ) -> CompiledArtifact | None:
+        """Store-hit-before-compile: a verified artifact, or ``None`` on
+        a clean miss / no store.  A corrupt entry is LOUD at the store
+        layer (quarantined there) but *recoverable* here: the registry
+        counts it and falls back to a clean compile — a bad disk must
+        degrade a fleet to cold-start latency, never to wrong bits or a
+        crashed server."""
+        if self.store is None:
+            return None
+        try:
+            artifact = self.store.load(fingerprint, spec)
+        except PermanentCompileError:
+            self.store_failures += 1
+            return None
+        if artifact is None:
+            self.store_misses += 1
+            return None
+        self.store_hits += 1
+        return artifact
+
+    def _store_save(self, artifact: CompiledArtifact,
+                    raw_fp: str | None = None,
+                    req_spec: CompileSpec | None = None) -> None:
+        """Write-through after a compile (best-effort: a full/read-only
+        disk costs persistence, not serving).  When the request carried
+        a pipeline, an alias record for the RAW identity rides along so
+        other processes warm-start without re-running the optimizer."""
+        if self.store is None:
+            return
+        try:
+            key = self.store.save(artifact)
+            self.store_saves += 1
+        except Exception as exc:              # noqa: BLE001 — see docstring
+            self.store_save_failures += 1
+            warnings.warn(f"artifact-store write-through failed: {exc!r}",
+                          RuntimeWarning, stacklevel=3)
+            return
+        if req_spec is None or req_spec.pipeline is None:
+            return
+        try:
+            req_spec.to_dict()
+        except ValueError:                    # custom pipeline: no alias
+            return
+        try:
+            self.store.save_alias(raw_fp, req_spec, key)
+        except Exception as exc:              # noqa: BLE001 — best-effort
+            self.store_save_failures += 1
+            warnings.warn(f"artifact-store alias write failed: {exc!r}",
+                          RuntimeWarning, stacklevel=3)
 
     def _resolved(self, graph: LogicGraph, spec: CompileSpec) -> CompileSpec:
         """Resolve ``n_unit="auto"`` for ``graph`` (memoized): repeat
@@ -349,8 +481,13 @@ class ProgramCache:
     def stats(self) -> dict:
         with self._lock:
             return {"entries": len(self._entries), "hits": self.hits,
-                    "misses": self.misses,
+                    "misses": self.misses, "compiles": self.compiles,
                     "compile_failures": self.compile_failures,
+                    "store_hits": self.store_hits,
+                    "store_misses": self.store_misses,
+                    "store_failures": self.store_failures,
+                    "store_saves": self.store_saves,
+                    "store_save_failures": self.store_save_failures,
                     "programs": sum(len(e.programs)
                                     for e in self._entries.values())}
 
@@ -420,10 +557,15 @@ class LogicEngine:
       shard: force (True) / forbid (False) the shard_map path; default
         ``None`` = auto (shard iff the mesh spans > 1 device).
       cache: optionally share a :class:`ProgramCache` across engines.
-        Mutually exclusive with ``max_programs`` — bound a shared cache
-        at its own construction.
+        Mutually exclusive with ``max_programs`` / ``store`` — bound and
+        back a shared cache at its own construction.
       max_programs: LRU bound on the engine-owned program cache
         (compiled programs + device arrays + jit traces per entry).
+      store: optional :class:`~repro.core.artifact_store.ArtifactStore`
+        backing the engine-owned cache — a fresh engine process warms
+        from the shared store directory (first request served with zero
+        compiles when precompiled, e.g. via ``tools/precompile.py``)
+        and writes its own compiles through for the rest of the fleet.
       max_retained: bound on *completed* requests kept for
         :meth:`result` pickup; beyond it the oldest unclaimed results are
         dropped (FIFO). ``None`` (default) retains until claimed — set a
@@ -437,6 +579,7 @@ class LogicEngine:
                  mesh: Mesh | None = None,
                  shard: bool | None = None, cache: ProgramCache | None = None,
                  max_programs: int | None = None,
+                 store: ArtifactStore | None = None,
                  max_retained: int | None = None, use_ref: bool = False,
                  interpret: bool = True, block_w: int = _k.LANE,
                  n_unit=_UNSET, alloc=_UNSET, max_gates=_UNSET,
@@ -451,7 +594,13 @@ class LogicEngine:
             raise ValueError(
                 "max_programs bounds the engine-owned cache; bound a shared "
                 "ProgramCache at its own construction instead")
-        self.cache = cache if cache is not None else ProgramCache(max_programs)
+        if cache is not None and store is not None:
+            raise ValueError(
+                "store backs the engine-owned cache; attach an "
+                "ArtifactStore to the shared ProgramCache at its own "
+                "construction instead")
+        self.cache = cache if cache is not None else \
+            ProgramCache(max_programs, store=store)
 
         if mesh is None and (shard or (shard is None and
                                        len(jax.devices()) > 1)):

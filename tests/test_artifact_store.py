@@ -1,0 +1,615 @@
+"""ArtifactStore: differential persistence, corruption injection, races.
+
+The integrity contract under test (DESIGN.md §10): a store-loaded
+program is byte-identical to the fresh compile it replaces, any
+corrupted or mismatched entry fails **loudly** (``ArtifactIntegrityError``,
+a ``PermanentCompileError``) and is quarantined — never silently served —
+and ``ProgramCache`` degrades a bad disk to a clean recompile, pinned by
+counters rather than timing.  Concurrency sections prove the atomic
+publish protocol: racing writers of one key leave exactly one valid
+entry, and racing readers never observe a torn write.
+"""
+import json
+import subprocess
+import sys
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core.artifact_store import (ArtifactStore, FORMAT_VERSION,
+                                       _canonical_json, _digest, store_key)
+from repro.core.compiler import LogicCompiler
+from repro.core.errors import ArtifactIntegrityError, PermanentCompileError
+from repro.core.gate_ir import random_graph
+from repro.core.scheduler import LogicProgram
+from repro.core.spec import CompileSpec
+from repro.serve import FrontDoor, LogicEngine, ProgramCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # tier-1 containers may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+def _graph(rng, n_in=10, n_gates=200, n_out=8):
+    return random_graph(rng, n_in, n_gates, n_out, locality=32)
+
+
+def _compiled(rng, spec=None, **kw):
+    """A (graph, resolved target spec, artifact) triple on the exact
+    identity ``ProgramCache`` keys on: post-opt graph, normalized spec."""
+    spec = spec or CompileSpec(n_unit=8)
+    g = _graph(rng, **kw)
+    pipeline = spec.pipeline
+    go = pipeline.run(g).graph if pipeline is not None else g
+    target, _ = LogicCompiler().resolve(go, spec, assume_optimized=True)
+    target = target.normalize(go).with_(optimize="none")
+    art = LogicCompiler().compile(go, target, assume_optimized=True)
+    return go, target, art
+
+
+def _assert_same_artifact(a, b):
+    """Bit-for-bit equality of two CompiledArtifacts' schedule tables."""
+    assert a.spec == b.spec
+    assert a.graph.fingerprint() == b.graph.fingerprint()
+    assert a.output_perm.dtype == b.output_perm.dtype
+    assert a.output_perm.tobytes() == b.output_perm.tobytes()
+    assert len(a.programs) == len(b.programs)
+    for pa, pb in zip(a.programs, b.programs):
+        for f in LogicProgram.ARRAY_FIELDS:
+            xa, xb = getattr(pa, f), getattr(pb, f)
+            assert xa.dtype == xb.dtype, f
+            assert xa.tobytes() == xb.tobytes(), f
+        for f in LogicProgram.SCALAR_FIELDS:
+            assert getattr(pa, f) == getattr(pb, f), f
+
+
+def _retamper(store, key, mutate):
+    """Corrupt an entry *consistently*: apply ``mutate(payload, path)``
+    then recompute the manifest checksum — modelling a wrong-but-
+    internally-consistent entry (only deeper checks can catch it)."""
+    path = store.path_of(key)
+    manifest = json.loads((path / "manifest.json").read_text())
+    mutate(manifest["payload"], path)
+    manifest["checksum"] = _digest(_canonical_json(manifest["payload"]))
+    (path / "manifest.json").write_text(json.dumps(manifest))
+
+
+# ---------------------------------------------------------------------------
+# round trip + content addressing
+# ---------------------------------------------------------------------------
+
+def test_round_trip_bit_identical(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    g, spec, art = _compiled(rng)
+    key = store.save(art)
+    assert key in store and store.contains(g.fingerprint(), spec)
+    loaded = store.load(g.fingerprint(), spec)
+    _assert_same_artifact(loaded, art)
+    assert loaded.compile_s == pytest.approx(art.compile_s)
+    bits = rng.integers(0, 2, (40, g.n_inputs)).astype(bool)
+    assert (loaded.execute(bits) == g.evaluate(bits)).all()
+
+
+def test_partitioned_round_trip(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    g, spec, art = _compiled(rng, spec=CompileSpec(n_unit=8, max_gates=60),
+                             n_gates=300)
+    assert len(art.programs) > 1
+    store.save(art)
+    loaded = store.load(g.fingerprint(), spec)
+    _assert_same_artifact(loaded, art)
+    bits = rng.integers(0, 2, (33, g.n_inputs)).astype(bool)
+    assert (loaded.execute(bits) == g.evaluate(bits)).all()
+
+
+def test_save_is_idempotent(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    _, _, art = _compiled(rng)
+    k1 = store.save(art)
+    k2 = store.save(art)
+    assert k1 == k2 and store.saves == 1 and len(store.keys()) == 1
+
+
+def test_content_addressing_separates_specs(tmp_path, rng):
+    """Same graph under different fabric widths = different entries;
+    a structural copy (different name) = the same entry."""
+    store = ArtifactStore(tmp_path)
+    g = _graph(rng)
+    keys = set()
+    for n_unit in (8, 16):
+        spec = CompileSpec(n_unit=n_unit, optimize="none").normalize(g)
+        art = LogicCompiler().compile(g, spec, assume_optimized=True)
+        keys.add(store.save(art))
+    assert len(keys) == 2
+    g2 = g.copy()
+    g2.name = "renamed-structural-copy"
+    spec = CompileSpec(n_unit=8, optimize="none").normalize(g)
+    assert store.contains(g2.fingerprint(), spec)
+
+
+def test_clean_miss_returns_none(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    g, spec, _ = _compiled(rng)
+    assert store.load(g.fingerprint(), spec) is None
+    assert store.misses == 1 and store.integrity_failures == 0
+
+
+def test_store_key_requires_resolved_spec(rng):
+    g = _graph(rng)
+    with pytest.raises(ValueError, match="auto"):
+        store_key(g.fingerprint(), CompileSpec(n_unit="auto"))
+
+
+def test_custom_pipeline_is_not_storable(tmp_path, rng):
+    """A custom PassManager has no declarative serial form: save must
+    raise (from to_dict) rather than store a lossy key."""
+    from repro.core.opt import PassManager
+    store = ArtifactStore(tmp_path)
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8, optimize=PassManager([])).normalize(g)
+    art = LogicCompiler().compile(g, spec, assume_optimized=True)
+    with pytest.raises(ValueError, match="pipeline"):
+        store.save(art)
+
+
+def test_load_key_by_bare_key(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    _, _, art = _compiled(rng)
+    key = store.save(art)
+    _assert_same_artifact(store.load_key(key), art)
+    with pytest.raises(KeyError):
+        store.load_key("0" * 32)
+
+
+# ---------------------------------------------------------------------------
+# corruption injection — every bad entry fails LOUDLY and is quarantined
+# ---------------------------------------------------------------------------
+
+def _saved(tmp_path, rng):
+    store = ArtifactStore(tmp_path)
+    g, spec, art = _compiled(rng)
+    key = store.save(art)
+    return store, g, spec, key
+
+
+def _assert_integrity_failure(store, g, spec, match):
+    with pytest.raises(ArtifactIntegrityError, match=match) as ei:
+        store.load(g.fingerprint(), spec)
+    # the loud-failure contract: permanent (not retryable), quarantined,
+    # and the entry can never be served again — next load is a clean miss
+    assert isinstance(ei.value, PermanentCompileError)
+    assert ei.value.quarantine_path is not None
+    assert ei.value.quarantine_path.exists()
+    assert store.integrity_failures == 1 and store.quarantined == 1
+    assert store.load(g.fingerprint(), spec) is None
+
+
+def test_truncated_arrays_fail_loudly(tmp_path, rng):
+    store, g, spec, key = _saved(tmp_path, rng)
+    npz = store.path_of(key) / "arrays.npz"
+    npz.write_bytes(npz.read_bytes()[:100])
+    _assert_integrity_failure(store, g, spec, "checksum")
+
+
+def test_bit_flipped_arrays_fail_loudly(tmp_path, rng):
+    store, g, spec, key = _saved(tmp_path, rng)
+    npz = store.path_of(key) / "arrays.npz"
+    blob = bytearray(npz.read_bytes())
+    blob[len(blob) // 2] ^= 0x01
+    npz.write_bytes(bytes(blob))
+    _assert_integrity_failure(store, g, spec, "checksum")
+
+
+@pytest.mark.parametrize("pos", ["start", "middle", "end"])
+def test_bit_flipped_manifest_fails_loudly(tmp_path, rng, pos):
+    """ANY manifest bit flip fails: either json no longer parses or the
+    payload no longer matches its own checksum."""
+    store, g, spec, key = _saved(tmp_path, rng)
+    mf = store.path_of(key) / "manifest.json"
+    blob = bytearray(mf.read_bytes())
+    i = {"start": 1, "middle": len(blob) // 2, "end": len(blob) - 2}[pos]
+    blob[i] ^= 0x08
+    mf.write_bytes(bytes(blob))
+    _assert_integrity_failure(store, g, spec, "manifest")
+
+
+def test_fingerprint_mismatch_fails_loudly(tmp_path, rng):
+    """A wrong-but-internally-consistent entry (tampered + rechecksummed
+    fingerprint) must still be refused — it names a different program."""
+    store, g, spec, key = _saved(tmp_path, rng)
+
+    def swap_fp(payload, path):
+        payload["fingerprint"] = "f" * len(payload["fingerprint"])
+    _retamper(store, key, swap_fp)
+    _assert_integrity_failure(store, g, spec, "fingerprint")
+
+
+def test_tampered_graph_fails_end_to_end_check(tmp_path, rng):
+    """Tamper the graph tables AND recompute every checksum: only the
+    rebuilt-fingerprint end-to-end check can catch it — and does."""
+    import io
+    store, g, spec, key = _saved(tmp_path, rng)
+
+    def swap_gates(payload, path):
+        blob = (path / "arrays.npz").read_bytes()
+        with np.load(io.BytesIO(blob), allow_pickle=False) as z:
+            arrays = {k: z[k] for k in z.files}
+        gates = arrays["graph_gates"]
+        gates[0, 1], gates[0, 2] = gates[0, 2], gates[0, 1] + 1
+        buf = io.BytesIO()
+        np.savez(buf, **arrays)
+        (path / "arrays.npz").write_bytes(buf.getvalue())
+        payload["arrays_checksum"] = _digest(buf.getvalue())
+    _retamper(store, key, swap_gates)
+    _assert_integrity_failure(store, g, spec, "fingerprint")
+
+
+def test_future_format_version_is_refused(tmp_path, rng):
+    store, g, spec, key = _saved(tmp_path, rng)
+
+    def bump(payload, path):
+        payload["format_version"] = FORMAT_VERSION + 1
+    _retamper(store, key, bump)
+    _assert_integrity_failure(store, g, spec, "format-version")
+
+
+def test_spec_mismatch_fails_loudly(tmp_path, rng):
+    store, g, spec, key = _saved(tmp_path, rng)
+
+    def swap_spec(payload, path):
+        payload["spec"]["alloc"] = (
+            "direct" if payload["spec"]["alloc"] == "liveness"
+            else "liveness")
+    _retamper(store, key, swap_spec)
+    _assert_integrity_failure(store, g, spec, "spec")
+
+
+def test_load_key_detects_moved_entry(tmp_path, rng):
+    """An entry renamed to another key's address is corruption, not a
+    hit — the manifest-derived key must re-derive to the address."""
+    import shutil
+    store, g, spec, key = _saved(tmp_path, rng)
+    fake = "0" * len(key)
+    dst = store.path_of(fake)
+    dst.parent.mkdir(parents=True, exist_ok=True)
+    shutil.move(store.path_of(key), dst)
+    with pytest.raises(ArtifactIntegrityError, match="key"):
+        store.load_key(fake)
+    assert store.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# ProgramCache integration — write-through, warm start, loud fallback
+# ---------------------------------------------------------------------------
+
+def test_cache_write_through_then_warm_start(tmp_path, rng):
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8)
+    store = ArtifactStore(tmp_path)
+    cold = ProgramCache(store=store)
+    entry = cold.get(g, spec)
+    assert cold.stats() == {
+        "entries": 1, "hits": 0, "misses": 1, "compiles": 1,
+        "compile_failures": 0, "store_hits": 0, "store_misses": 1,
+        "store_failures": 0, "store_saves": 1, "store_save_failures": 0,
+        "programs": 1}
+    # a brand-new cache over the same store: zero compiles, by counter
+    warm = ProgramCache(store=ArtifactStore(tmp_path))
+    w_entry = warm.get(g, spec)
+    assert warm.stats()["compiles"] == 0
+    assert warm.stats()["store_hits"] == 1
+    _assert_same_artifact(w_entry.artifact, entry.artifact)
+    # in-memory hit on repeat: the store is not consulted again
+    warm.get(g, spec)
+    assert warm.stats()["hits"] == 1 and warm.store.loads == 1
+
+
+def test_cache_falls_back_to_compile_on_corruption(tmp_path, rng):
+    """A corrupt store degrades to cold-start latency, never to wrong
+    bits or a crashed server: counter-pinned fallback + quarantine."""
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8)
+    store = ArtifactStore(tmp_path)
+    ProgramCache(store=store).get(g, spec)
+    key = store.keys()[0]
+    npz = store.path_of(key) / "arrays.npz"
+    npz.write_bytes(b"not an npz at all")
+
+    fresh_store = ArtifactStore(tmp_path)
+    cache = ProgramCache(store=fresh_store)
+    entry = cache.get(g, spec)
+    st = cache.stats()
+    assert st["compiles"] == 1 and st["store_failures"] == 1
+    assert st["store_hits"] == 0 and st["store_saves"] == 1
+    assert fresh_store.integrity_failures == 1
+    assert fresh_store.quarantined == 1
+    bits = rng.integers(0, 2, (25, g.n_inputs)).astype(bool)
+    assert (entry.artifact.execute(bits) == g.evaluate(bits)).all()
+    # the write-through after fallback republished a valid entry
+    warm = ProgramCache(store=ArtifactStore(tmp_path))
+    warm.get(g, spec)
+    assert warm.stats()["compiles"] == 0
+
+
+def test_cache_survives_store_write_failure(tmp_path, rng):
+    """Write-through is best-effort: a failing disk warns and counts,
+    serving continues."""
+    g = _graph(rng)
+    store = ArtifactStore(tmp_path)
+    store.save = lambda artifact: (_ for _ in ()).throw(OSError("disk full"))
+    cache = ProgramCache(store=store)
+    with pytest.warns(RuntimeWarning, match="write-through"):
+        entry = cache.get(g, CompileSpec(n_unit=8))
+    st = cache.stats()
+    assert st["store_save_failures"] == 1 and st["store_saves"] == 0
+    assert entry.artifact is not None
+
+
+def test_cache_without_store_pins_zero_store_counters(rng):
+    cache = ProgramCache()
+    cache.get(_graph(rng), CompileSpec(n_unit=8))
+    st = cache.stats()
+    assert st["compiles"] == 1
+    assert (st["store_hits"], st["store_misses"], st["store_failures"],
+            st["store_saves"], st["store_save_failures"]) == (0,) * 5
+
+
+def test_engine_and_frontdoor_store_wiring(tmp_path, rng):
+    g = _graph(rng)
+    store = ArtifactStore(tmp_path)
+    eng = LogicEngine(CompileSpec(n_unit=8), capacity=64, store=store)
+    assert eng.cache.store is store
+    bits = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
+    assert (eng.serve(g, bits) == g.evaluate(bits)).all()
+    # the front door warm-starts its engine from the populated store
+    door = FrontDoor(spec=CompileSpec(n_unit=8), capacity=64,
+                     store=ArtifactStore(tmp_path))
+    assert (door.engine.serve(g, bits) == g.evaluate(bits)).all()
+    assert door.engine.cache.stats()["compiles"] == 0
+    assert door.engine.cache.stats()["store_hits"] == 1
+    # a caller-owned engine and a store are mutually exclusive
+    with pytest.raises(ValueError, match="store"):
+        LogicEngine(CompileSpec(n_unit=8), cache=ProgramCache(), store=store)
+    with pytest.raises(ValueError, match="store"):
+        FrontDoor(engine=eng, store=store)
+
+
+# ---------------------------------------------------------------------------
+# raw-identity aliases — warm start without re-running the optimizer
+# ---------------------------------------------------------------------------
+
+def test_alias_warm_start_skips_pipeline(tmp_path, rng, monkeypatch):
+    """The whole point of alias records: a fresh process resolves a raw
+    graph + ``optimize="default"`` spec from the store WITHOUT running
+    the pass pipeline (the dominant cold-start cost).  Pinned by making
+    the pipeline explode, not by timing."""
+    from repro.core.opt import PassManager
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8)          # optimize="default"
+    ProgramCache(store=ArtifactStore(tmp_path)).get(g, spec)
+
+    def boom(self, graph):
+        raise AssertionError("pass pipeline ran on the warm path")
+    monkeypatch.setattr(PassManager, "run", boom)
+    warm = ProgramCache(store=ArtifactStore(tmp_path))
+    entry = warm.get(g.copy(), spec)      # fresh object: no memos
+    st = warm.stats()
+    assert st["compiles"] == 0 and st["store_hits"] == 1
+    bits = rng.integers(0, 2, (20, g.n_inputs)).astype(bool)
+    assert (entry.artifact.execute(bits) == g.evaluate(bits)).all()
+    # and the repeat request stays in memory (memos were seeded)
+    warm.get(g.copy(), spec)
+    assert warm.stats()["hits"] == 1 and warm.store.loads == 1
+
+
+def test_corrupt_alias_fails_loudly_and_falls_back(tmp_path, rng):
+    """A flipped alias record is refused + quarantined; the cache falls
+    back to the normal path, which still finds the (valid) canonical
+    entry — zero compiles, one counted store failure."""
+    from repro.core.artifact_store import alias_key
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8)
+    store = ArtifactStore(tmp_path)
+    ProgramCache(store=store).get(g, spec)
+    apath = store.alias_path_of(alias_key(g.fingerprint(), spec))
+    blob = bytearray(apath.read_bytes())
+    blob[len(blob) // 2] ^= 0x04
+    apath.write_bytes(bytes(blob))
+
+    cache = ProgramCache(store=ArtifactStore(tmp_path))
+    cache.get(g.copy(), spec)
+    st = cache.stats()
+    assert st["compiles"] == 0            # canonical entry still served
+    assert st["store_failures"] == 1 and st["store_hits"] == 1
+    assert cache.store.quarantined == 1
+    assert not apath.exists()             # record can never be read again
+
+    # a direct load of a (re-)corrupted record raises, quarantines
+    apath.write_bytes(b"{ not json")
+    fresh_store = ArtifactStore(tmp_path)
+    with pytest.raises(ArtifactIntegrityError, match="alias"):
+        fresh_store.load_alias(g.fingerprint(), spec)
+    assert fresh_store.quarantined == 1
+
+
+def test_dangling_alias_is_a_clean_miss(tmp_path, rng):
+    """An alias whose canonical entry was quarantined by another process
+    reads as a miss: recompile, republish, no error."""
+    import shutil
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=8)
+    store = ArtifactStore(tmp_path)
+    ProgramCache(store=store).get(g, spec)
+    shutil.rmtree(tmp_path / "objects")
+    (tmp_path / "objects").mkdir()
+
+    cache = ProgramCache(store=ArtifactStore(tmp_path))
+    cache.get(g.copy(), spec)
+    st = cache.stats()
+    assert st["compiles"] == 1 and st["store_hits"] == 0
+    # write-through republished BOTH records: next process warm-starts
+    warm = ProgramCache(store=ArtifactStore(tmp_path))
+    warm.get(g.copy(), spec)
+    assert warm.stats()["compiles"] == 0
+
+
+def test_alias_respects_spec_identity(tmp_path, rng):
+    """Aliases are keyed by the requested spec too: a different fabric
+    width must not hit another spec's alias."""
+    g = _graph(rng)
+    store = ArtifactStore(tmp_path)
+    ProgramCache(store=store).get(g, CompileSpec(n_unit=8))
+    assert store.load_alias(g.fingerprint(), CompileSpec(n_unit=16)) is None
+    cache = ProgramCache(store=ArtifactStore(tmp_path))
+    cache.get(g.copy(), CompileSpec(n_unit=16))
+    assert cache.stats()["compiles"] == 1
+
+
+# ---------------------------------------------------------------------------
+# concurrency — the atomic-rename publish contract
+# ---------------------------------------------------------------------------
+
+def test_racing_writers_one_valid_artifact(tmp_path, rng):
+    """N threads publish the same key at once: exactly one entry exists,
+    every racer either published or benignly lost the rename, and the
+    survivor verifies."""
+    g, spec, art = _compiled(rng)
+    stores = [ArtifactStore(tmp_path) for _ in range(8)]
+    barrier = threading.Barrier(len(stores))
+    errors = []
+
+    def publish(store):
+        try:
+            barrier.wait()
+            store.save(art)
+        except Exception as exc:              # noqa: BLE001 — fail the test
+            errors.append(exc)
+
+    threads = [threading.Thread(target=publish, args=(s,)) for s in stores]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert not errors
+    assert len(stores[0].keys()) == 1
+    assert sum(s.saves + s.save_races for s in stores) == len(stores)
+    _assert_same_artifact(stores[0].load(g.fingerprint(), spec), art)
+    assert (tmp_path / "tmp").exists()
+    assert list((tmp_path / "tmp").iterdir()) == []   # staging all cleaned
+
+
+def test_reader_never_sees_torn_write(tmp_path, rng):
+    """Readers racing a writer observe either a clean miss or a fully
+    verified artifact — never a torn entry (that would raise)."""
+    g, spec, art = _compiled(rng, n_gates=120)
+    writer_store = ArtifactStore(tmp_path)
+    outcomes, errors = [], []
+    start = threading.Event()
+
+    def read():
+        store = ArtifactStore(tmp_path)
+        start.wait()
+        deadline = time.monotonic() + 30.0
+        while time.monotonic() < deadline:
+            try:
+                loaded = store.load(g.fingerprint(), spec)
+            except Exception as exc:          # noqa: BLE001 — fail the test
+                errors.append(exc)
+                return
+            if loaded is not None:
+                _assert_same_artifact(loaded, art)
+                outcomes.append(True)         # observed the published entry
+                return
+        outcomes.append(False)                # never saw the write land
+
+    readers = [threading.Thread(target=read) for _ in range(4)]
+    for t in readers:
+        t.start()
+    start.set()
+    writer_store.save(art)
+    for t in readers:
+        t.join()
+    assert not errors
+    assert outcomes == [True] * len(readers)
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property coverage
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def artifact_cases(draw):
+        seed = draw(st.integers(0, 10 ** 6))
+        n_inputs = draw(st.integers(2, 10))
+        n_gates = draw(st.integers(1, 120))
+        n_unit = draw(st.sampled_from([8, 16]))
+        alloc = draw(st.sampled_from(["direct", "liveness"]))
+        max_gates = draw(st.sampled_from([None, 40]))
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng, n_inputs, n_gates,
+                         min(4, n_gates), locality=16)
+        spec = CompileSpec(n_unit=n_unit, alloc=alloc, max_gates=max_gates,
+                           optimize="none").normalize(g)
+        return g, spec
+
+    @settings(max_examples=25, deadline=None)
+    @given(artifact_cases())
+    def test_property_round_trip_byte_identical(tmp_path_factory, case):
+        """For arbitrary (graph, spec): save -> load reproduces every
+        schedule stream byte for byte and every spec field exactly."""
+        g, spec = case
+        art = LogicCompiler().compile(g, spec, assume_optimized=True)
+        store = ArtifactStore(tmp_path_factory.mktemp("prop-store"))
+        store.save(art)
+        loaded = store.load(g.fingerprint(), spec)
+        _assert_same_artifact(loaded, art)
+        assert loaded.spec == spec
+
+    @settings(max_examples=50, deadline=None)
+    @given(st.sampled_from([8, 16, 64]),
+           st.sampled_from(["direct", "liveness"]),
+           st.booleans(), st.booleans(),
+           st.sampled_from([None, 40, 4096]),
+           st.sampled_from(["none", "default"]))
+    def test_property_spec_dict_round_trip(n_unit, alloc, opcode_sort,
+                                           fuse_levels, max_gates, optimize):
+        spec = CompileSpec(n_unit=n_unit, alloc=alloc,
+                           opcode_sort=opcode_sort, fuse_levels=fuse_levels,
+                           max_gates=max_gates, optimize=optimize)
+        back = CompileSpec.from_dict(spec.to_dict())
+        assert back == spec and back.cache_key() == spec.cache_key()
+        assert (_canonical_json(back.to_dict())
+                == _canonical_json(spec.to_dict()))
+
+
+# ---------------------------------------------------------------------------
+# two-process warm start (the fleet contract, end to end)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+def test_two_process_warm_start(tmp_path):
+    """tools/precompile.py in one process, a fresh engine in another:
+    the engine's first request compiles nothing (counter-pinned)."""
+    args = ["--seed", "3", "--gates", "250", "--inputs", "10",
+            "--outputs", "6", "--n-unit", "8"]
+    env = {"PYTHONPATH": "src", "PATH": "/usr/bin:/bin"}
+    try:
+        pre = subprocess.run(
+            [sys.executable, "tools/precompile.py", "--store",
+             str(tmp_path), "--jobs", "0", "--verify", *args],
+            capture_output=True, text=True, timeout=300, env=env)
+        assert pre.returncode == 0, pre.stderr[-2000:]
+        warm = subprocess.run(
+            [sys.executable, "examples/warm_start.py", "--store",
+             str(tmp_path), *args],
+            capture_output=True, text=True, timeout=300, env=env)
+    except subprocess.TimeoutExpired:
+        pytest.skip("two-process warm-start smoke exceeded 300s")
+    assert warm.returncode == 0, warm.stderr[-2000:]
+    assert "0 compiles" in warm.stdout and "warm-start OK" in warm.stdout

@@ -22,11 +22,14 @@ import numpy as np
 import pytest
 
 from repro.core import espresso
+from repro.core.artifact_store import ArtifactStore
+from repro.core.compiler import LogicCompiler
 from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, OpCode,
                                 random_graph)
 from repro.core.nullanet import layer_to_graph
 from repro.core.spec import CompileSpec
-from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.scheduler import (LogicProgram, compile_graph,
+                                  execute_program_np)
 from repro.core.synth import optimize
 from repro.core.verilog import emit_verilog, parse_verilog
 from repro.kernels.logic_dsp.ops import logic_infer_bits
@@ -173,6 +176,80 @@ def test_compile_optimize_knob_conformance(rng):
             assert (execute_program_np(prog, bits) == want).all()
             assert (logic_infer_bits(prog, bits, use_ref=True) == want).all()
             assert (logic_infer_bits(prog, bits, use_ref=False) == want).all()
+
+
+# ---------------------------------------------------------------------------
+# store-load vs fresh-compile differential (persistence conformance)
+# ---------------------------------------------------------------------------
+
+def _round_trip(tmp_path, graph, spec):
+    """Fresh compile -> store -> load through a *separate* store
+    instance (nothing shared in memory); asserts the schedule streams
+    are byte-identical before handing back both artifacts."""
+    fresh = LogicCompiler().compile(graph, spec, assume_optimized=True)
+    ArtifactStore(tmp_path).save(fresh)
+    loaded = ArtifactStore(tmp_path).load(graph.fingerprint(), spec)
+    assert loaded is not None
+    assert len(loaded.programs) == len(fresh.programs)
+    for pf, pl in zip(fresh.programs, loaded.programs):
+        for f in LogicProgram.ARRAY_FIELDS:
+            a, b = getattr(pf, f), getattr(pl, f)
+            assert a.dtype == b.dtype and a.tobytes() == b.tobytes(), f
+    return fresh, loaded
+
+
+@pytest.mark.parametrize("alloc", ALLOCS)
+def test_store_loaded_program_conformance(tmp_path, alloc):
+    """A store-loaded program is indistinguishable from the fresh
+    compile it replaces on EVERY backend: numpy oracle, jnp reference,
+    and the Pallas kernel all serve the same bits from the loaded
+    streams."""
+    rng = np.random.default_rng(11)
+    g = random_graph(rng, 10, 220, 8, locality=32)
+    bits = _bits(rng, 37, 10)
+    want = g.evaluate(bits)
+    for n_unit in N_UNITS:
+        spec = CompileSpec(n_unit=n_unit, alloc=alloc,
+                           optimize="none").normalize(g)
+        _, loaded = _round_trip(tmp_path, g, spec)
+        (prog,) = loaded.programs
+        ctx = f"n_unit={n_unit} alloc={alloc} (store-loaded)"
+        assert (execute_program_np(prog, bits) == want).all(), ctx
+        assert (logic_infer_bits(prog, bits, use_ref=True) == want).all(), ctx
+        assert (logic_infer_bits(prog, bits, use_ref=False) == want).all(), ctx
+
+
+def test_store_loaded_partitioned_conformance(tmp_path):
+    """Partitioned artifacts round-trip too: each loaded sub-program
+    conforms on every backend, and the re-assembled pipeline (concat +
+    output permutation) matches the raw graph."""
+    rng = np.random.default_rng(12)
+    g = random_graph(rng, 12, 320, 10, locality=48)
+    bits = _bits(rng, 41, 12)
+    want = g.evaluate(bits)
+    spec = CompileSpec(n_unit=8, max_gates=80, optimize="none").normalize(g)
+    fresh, loaded = _round_trip(tmp_path, g, spec)
+    assert len(loaded.programs) > 1
+    assert (loaded.output_perm == fresh.output_perm).all()
+    for backend in (execute_program_np,
+                    lambda p, x: logic_infer_bits(p, x, use_ref=True),
+                    lambda p, x: logic_infer_bits(p, x, use_ref=False)):
+        outs = np.concatenate([np.asarray(backend(p, bits))
+                               for p in loaded.programs], axis=1)
+        assert (outs[:, loaded.output_perm] == want).all()
+
+
+def test_store_loaded_optimized_graph_conformance(tmp_path):
+    """The cache-path identity (post-optimization graph + stripped
+    spec) round-trips and still serves the RAW graph's semantics."""
+    from repro.core.opt import PassManager
+    rng = np.random.default_rng(13)
+    g = random_graph(rng, 9, 180, 6, locality=24)
+    bits = _bits(rng, 29, 9)
+    go = PassManager.default().run(g).graph
+    spec = CompileSpec(n_unit=8, optimize="none").normalize(go)
+    _, loaded = _round_trip(tmp_path, go, spec)
+    assert (loaded.execute(bits) == g.evaluate(bits)).all()
 
 
 def test_optimized_degenerate_graphs_conform(rng):

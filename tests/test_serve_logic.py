@@ -60,6 +60,22 @@ def test_program_cache_lru_eviction(rng):
     assert cache.misses == 4
 
 
+def test_program_cache_stats_schema(rng):
+    """The stats dict is a pinned schema (dashboards + warm-start tests
+    key on it): store counters are present — and zero — with no store
+    attached, and compiles tracks actual facade invocations."""
+    cache = ProgramCache()
+    g = _graph(rng)
+    cache.get(g, CompileSpec(n_unit=16))
+    cache.get(g, CompileSpec(n_unit=16))
+    assert cache.stats() == {
+        "entries": 1, "hits": 1, "misses": 1, "compiles": 1,
+        "compile_failures": 0, "store_hits": 0, "store_misses": 0,
+        "store_failures": 0, "store_saves": 0, "store_save_failures": 0,
+        "programs": 1}
+    assert cache.store is None
+
+
 def test_unbinding_budget_shares_monolithic_entry(rng):
     """Budgets the graph fits under normalize to the no-budget key."""
     g = _graph(rng, n_gates=80)
