@@ -443,14 +443,32 @@ def bench_flow_e2e(quick: bool) -> None:
     bits = input_bits(xv)
     engine = LogicEngine(cfg.spec, capacity=256)
     reps = 3 if quick else 5
-    for backend in ("reference", "pallas", "engine"):
+
+    # single-launch pin (counter hook, not timing): a FRESH chain
+    # megaprogram — its runner cache is empty, so this traces once — must
+    # execute the whole hidden stack in exactly ONE pallas_call, and the
+    # result must be bit-exact against the reference backend
+    from repro.core.scheduler import build_megaprogram
+    from repro.kernels.logic_dsp import kernel as _kern
+    from repro.kernels.logic_dsp.ops import mega_infer_bits
+    fresh_mega = build_megaprogram(clf.programs, mode="chain")
+    before = _kern.launch_count()
+    h_mega = mega_infer_bits(fresh_mega, bits)
+    launches = _kern.launch_count() - before
+    assert launches == 1, \
+        f"megakernel took {launches} pallas_call launches, expected 1"
+    h_ref = clf.hidden_bits(bits, backend="reference")
+    assert (h_mega == h_ref).all(), "megakernel diverged from reference"
+
+    for backend in ("reference", "pallas", "megakernel", "engine"):
         clf.hidden_bits(bits, backend=backend, engine=engine)   # warm
         t0 = time.perf_counter()
         for _ in range(reps):
             clf.hidden_bits(bits, backend=backend, engine=engine)
         dt = (time.perf_counter() - t0) / reps
+        extra = " launches=1 parity=exact" if backend == "megakernel" else ""
         row(f"flow.e2e.{backend}", dt * 1e6,
-            f"samples_per_s={len(bits) / dt:.0f} batch={len(bits)}",
+            f"samples_per_s={len(bits) / dt:.0f} batch={len(bits)}{extra}",
             spec=cfg.spec)
 
 

@@ -57,6 +57,11 @@ class CompiledArtifact:
     output_perm: np.ndarray                # concat(part outs)[perm] == orig
     compile_s: float = 0.0
     search: SearchResult | None = field(default=None, compare=False)
+    #: how a multi-program artifact composes: ``"parallel"`` (partition
+    #: pipeline — every program reads the primary inputs, outputs
+    #: re-assembled through ``output_perm``) or ``"chain"`` (layer stack —
+    #: program k's outputs feed program k+1; perm is identity).
+    mode: str = "parallel"
 
     @property
     def partitioned(self) -> bool:
@@ -86,12 +91,31 @@ class CompiledArtifact:
         from repro.kernels.logic_dsp.ops import program_arrays
         return [program_arrays(p) for p in self.programs]
 
+    def megaprogram(self):
+        """The artifact's whole pipeline flattened into one
+        :class:`~repro.core.scheduler.MegaProgram` for single-launch
+        execution (memoized on the artifact; the engine's runner path).
+        Partitioned artifacts fuse with the output permutation applied
+        in-kernel; chain artifacts fuse stage-to-stage handoff."""
+        mega = getattr(self, "_megaprogram", None)
+        if mega is None:
+            from repro.core.partition import mega_pipeline
+            mega = mega_pipeline(self.programs, self.output_perm,
+                                 mode=self.mode, name=self.graph.name)
+            object.__setattr__(self, "_megaprogram", mega)
+        return mega
+
     def execute(self, inputs: np.ndarray) -> np.ndarray:
         """Numpy-oracle execution of the whole artifact (every program
         over the same input slab, re-assembled in original output
-        order) — the semantic contract the kernel/serving paths are
-        tested against."""
+        order — or chained stage-to-stage for ``mode="chain"``) — the
+        semantic contract the kernel/serving paths are tested against."""
         from repro.core.scheduler import execute_program_np
+        if self.mode == "chain":
+            h = np.asarray(inputs)
+            for p in self.programs:
+                h = execute_program_np(p, h)
+            return h
         outs = [execute_program_np(p, inputs) for p in self.programs]
         cat = outs[0] if len(outs) == 1 else np.concatenate(outs, axis=1)
         return cat[:, self.output_perm]

@@ -203,6 +203,26 @@ def output_permutation(parts: list[Partition], n_outputs: int) -> np.ndarray:
     return perm
 
 
+def mega_pipeline(programs, output_perm: np.ndarray,
+                  mode: str = "parallel", name: str = "pipeline"):
+    """Flatten a compiled pipeline into one single-launch
+    :class:`~repro.core.scheduler.MegaProgram`.
+
+    For ``mode="parallel"`` (a partitioned artifact) the partitions'
+    concatenated output slabs are permuted back to the original output
+    order *inside* the kernel — the word-level re-assembly
+    :func:`output_permutation` describes stops being a separate host/XLA
+    gather step and the whole pipeline becomes one ``pallas_call``.  For
+    ``mode="chain"`` the permutation is necessarily identity (the last
+    stage's outputs are the pipeline's) and stage handoff fuses instead.
+    """
+    from repro.core.scheduler import build_megaprogram
+    if mode == "chain":
+        return build_megaprogram(programs, mode="chain", name=name)
+    return build_megaprogram(programs, mode="parallel",
+                             output_perm=output_perm, name=name)
+
+
 def execute_partitions(parts: list[Partition], inputs: np.ndarray,
                        executor=None) -> np.ndarray:
     """Run every sub-FFCL and reassemble the original output order."""

@@ -425,6 +425,169 @@ def compile_graph(graph: LogicGraph, spec: CompileSpec | int | None = None,
     )
 
 
+@dataclass(frozen=True)
+class MegaProgram:
+    """A whole program *pipeline* flattened for single-launch execution.
+
+    The per-stage :class:`LogicProgram` streams are concatenated along the
+    step axis (lanes padded to the widest stage's ``n_unit`` with NOPs
+    writing that stage's own trash row), with a static per-stage offset
+    table (``stage_meta``) into the shared scratch buffer sized by the
+    *maximum* ``n_addr`` across stages.  The megakernel
+    (kernels/logic_dsp/kernel.py) walks the table inside ONE
+    ``pallas_call``:
+
+      * ``mode="chain"``    — stage *k*'s output-addrs gather feeds stage
+        *k+1*'s input slice without leaving the kernel (the classifier's
+        per-layer launch chain fused; paper §5.2's cascaded DSP stages);
+      * ``mode="parallel"`` — every stage reads the same primary-input
+        slab (a partitioned pipeline); the per-stage output slabs are
+        concatenated and permuted back to the original output order by
+        ``output_perm`` in-kernel.
+
+    Each stage re-initializes the buffer (zeros, const-1 row, inputs at
+    rows 2..) because the liveness allocator may have released const or
+    input rows for reuse as gate destinations — stale rows from stage
+    *k* must never be observable to stage *k+1*'s address space.
+    """
+
+    mode: str                        # "chain" | "parallel"
+    stages: tuple                    # the source LogicPrograms, in order
+    # concatenated streams, (total_steps, n_unit) int32
+    src_a: np.ndarray
+    src_b: np.ndarray
+    dst: np.ndarray
+    opcode: np.ndarray
+    step_branch: np.ndarray          # (total_steps,) int32 dispatch branch
+    step_trash: np.ndarray           # (total_steps,) int32 owning stage's
+    #                                  trash row (lane-padding fill value)
+    out_addrs: np.ndarray            # (sum stage n_outputs,) int64
+    output_perm: np.ndarray          # (n_outputs,) int64; identity for chain
+    #: static per-stage offset table — one (step_lo, step_hi, n_inputs,
+    #: n_outputs, out_lo) tuple per stage; hashable, closed over by the
+    #: kernel as trace-time constants.
+    stage_meta: tuple
+    n_addr: int                      # max over stages (scratch sizing rule)
+    n_unit: int                      # max over stages (lane-padded width)
+    n_inputs: int
+    n_outputs: int
+    name: str = "mega"
+
+    @property
+    def total_steps(self) -> int:
+        return int(self.src_a.shape[0])
+
+    @property
+    def n_stages(self) -> int:
+        return len(self.stages)
+
+
+def build_megaprogram(programs, mode: str = "chain",
+                      output_perm: np.ndarray | None = None,
+                      name: str | None = None) -> MegaProgram:
+    """Flatten a program pipeline into one :class:`MegaProgram`.
+
+    ``mode="chain"`` requires ``programs[k].n_outputs ==
+    programs[k+1].n_inputs`` (the packed-handoff width contract);
+    ``mode="parallel"`` requires every stage to share the primary-input
+    width and takes the partition ``output_perm`` (identity = plain
+    concatenation order).
+    """
+    programs = tuple(programs)
+    if not programs:
+        raise ValueError("build_megaprogram needs at least one stage")
+    if mode not in ("chain", "parallel"):
+        raise ValueError(f"unknown mega mode {mode!r}")
+    if mode == "chain":
+        if output_perm is not None:
+            raise ValueError("chain mode has no output permutation: the "
+                             "last stage's outputs ARE the pipeline's")
+        for k in range(len(programs) - 1):
+            if programs[k].n_outputs != programs[k + 1].n_inputs:
+                raise ValueError(
+                    f"stage width mismatch: stage {k} produces "
+                    f"{programs[k].n_outputs} outputs, stage {k + 1} "
+                    f"expects {programs[k + 1].n_inputs} inputs")
+        n_inputs = programs[0].n_inputs
+        n_outputs = programs[-1].n_outputs
+        perm = np.arange(n_outputs, dtype=np.int64)
+    else:
+        n_inputs = programs[0].n_inputs
+        for p in programs[1:]:
+            if p.n_inputs != n_inputs:
+                raise ValueError(
+                    "parallel stages must share the primary-input width")
+        n_outputs = sum(p.n_outputs for p in programs)
+        perm = (np.arange(n_outputs, dtype=np.int64) if output_perm is None
+                else np.asarray(output_perm, dtype=np.int64))
+        if perm.shape != (n_outputs,) or \
+                not np.array_equal(np.sort(perm), np.arange(n_outputs)):
+            raise ValueError("output_perm must be a permutation of "
+                             f"range({n_outputs})")
+    n_unit = max(p.n_unit for p in programs)
+    n_addr = max(p.n_addr for p in programs)
+
+    streams = {"src_a": [], "src_b": [], "dst": [], "opcode": []}
+    branch, trash, out_addrs, meta = [], [], [], []
+    step_lo = out_lo = 0
+    for p in programs:
+        pad = n_unit - p.n_unit
+
+        def padded(a, fill):
+            a = np.asarray(a, dtype=np.int32)
+            if pad:
+                a = np.pad(a, ((0, 0), (0, pad)), constant_values=fill)
+            return a
+
+        streams["src_a"].append(padded(p.src_a, 0))
+        streams["src_b"].append(padded(p.src_b, 0))
+        streams["dst"].append(padded(p.dst, p.trash_addr))
+        streams["opcode"].append(padded(p.opcode, 0))
+        branch.append(p.step_branch)
+        trash.append(np.full(p.n_steps, p.trash_addr, dtype=np.int32))
+        out_addrs.append(np.asarray(p.output_addrs, dtype=np.int64))
+        meta.append((step_lo, step_lo + p.n_steps,
+                     p.n_inputs, p.n_outputs, out_lo))
+        step_lo += p.n_steps
+        out_lo += p.n_outputs
+
+    def cat(chunks, width=None):
+        if width is None:
+            return np.concatenate(chunks) if chunks else \
+                np.zeros(0, dtype=np.int32)
+        return np.concatenate(chunks, axis=0) if chunks else \
+            np.zeros((0, width), dtype=np.int32)
+
+    return MegaProgram(
+        mode=mode, stages=programs,
+        src_a=cat(streams["src_a"], n_unit),
+        src_b=cat(streams["src_b"], n_unit),
+        dst=cat(streams["dst"], n_unit),
+        opcode=cat(streams["opcode"], n_unit),
+        step_branch=cat(branch).astype(np.int32),
+        step_trash=cat(trash).astype(np.int32),
+        out_addrs=cat(out_addrs).astype(np.int64),
+        output_perm=perm, stage_meta=tuple(meta),
+        n_addr=int(n_addr), n_unit=int(n_unit),
+        n_inputs=int(n_inputs), n_outputs=int(n_outputs),
+        name=name or "+".join(p.name for p in programs))
+
+
+def execute_megaprogram_np(mega: MegaProgram, inputs: np.ndarray
+                           ) -> np.ndarray:
+    """Numpy oracle for mega execution — the chained / re-assembled
+    :func:`execute_program_np` the fused kernel must match bit-for-bit."""
+    inputs = np.asarray(inputs)
+    if mega.mode == "chain":
+        h = inputs
+        for p in mega.stages:
+            h = execute_program_np(p, h)
+        return h
+    outs = [execute_program_np(p, inputs) for p in mega.stages]
+    cat = outs[0] if len(outs) == 1 else np.concatenate(outs, axis=1)
+    return cat[:, mega.output_perm]
+
+
 def execute_program_np(prog: LogicProgram, inputs: np.ndarray) -> np.ndarray:
     """Numpy oracle for program execution on a boolean batch.
 

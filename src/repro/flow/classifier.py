@@ -6,12 +6,19 @@ fixed-function combinational logic. :class:`LogicClassifier` holds one
 full-precision output head, and executes the hidden stack through three
 interchangeable paths that must agree bit-for-bit:
 
-  * ``reference`` — the jnp program oracle (kernels/logic_dsp/ref.py);
-  * ``pallas``    — the Pallas fabric kernel (interpret mode on CPU);
-  * ``engine``    — batched :class:`~repro.serve.LogicEngine` serving of
-    the *composed* hidden-stack graph (``gate_ir.compose_graphs``), so a
-    partition budget splits the stack by output cones and serves it as a
-    pipelined multi-program sequence (core/partition.py).
+  * ``reference``  — the jnp program oracle (kernels/logic_dsp/ref.py);
+  * ``pallas``     — the Pallas fabric kernel, one launch per layer;
+  * ``megakernel`` — the whole hidden stack fused into ONE
+    :class:`~repro.core.scheduler.MegaProgram` and executed in a single
+    ``pallas_call`` (the layer loop runs *inside* the kernel, stage k's
+    output slab gathered straight into stage k+1's input rows);
+  * ``engine``     — batched :class:`~repro.serve.LogicEngine` serving.
+    With no partition budget the engine serves the per-layer programs as
+    a chain-mode megakernel entry (``submit_chain``); with
+    ``spec.max_gates`` set it serves the *composed* hidden-stack graph
+    (``gate_ir.compose_graphs``) so the budget splits the stack by
+    output cones into a parallel-mode pipeline (core/partition.py) —
+    either way the runner is one fused launch.
 
 **Packed-word handoff contract** (tested in tests/test_flow.py): for the
 reference/pallas paths the input batch is bit-packed ONCE into the
@@ -36,13 +43,15 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.gate_ir import LogicGraph, compose_graphs
+from repro.core.scheduler import build_megaprogram
 from repro.core.simulator import SimResult, simulate_pipeline
 from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.flow.convert import CompiledLayer, convert_layer
-from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
-                                         program_arrays, unpack_bits_jnp)
+from repro.kernels.logic_dsp.ops import (forward_words, mega_infer_runner,
+                                         pack_bits_jnp, program_arrays,
+                                         unpack_bits_jnp)
 
-BACKENDS = ("reference", "pallas", "engine")
+BACKENDS = ("reference", "pallas", "megakernel", "engine")
 
 
 def input_bits(x: np.ndarray) -> np.ndarray:
@@ -89,6 +98,7 @@ class LogicClassifier:
     b_out: np.ndarray
     spec: CompileSpec = field(default_factory=CompileSpec)
     _stacked: LogicGraph | None = field(default=None, repr=False)
+    _mega: object = field(default=None, repr=False)
     _runners: dict = field(default_factory=dict, repr=False)
     _engine: object = field(default=None, repr=False)
 
@@ -123,6 +133,16 @@ class LogicClassifier:
             self._stacked = compose_graphs(
                 [layer.graph for layer in self.layers], name="hidden-stack")
         return self._stacked
+
+    @property
+    def megaprogram(self):
+        """The per-layer programs fused into one chain-mode
+        :class:`~repro.core.scheduler.MegaProgram` (the single-launch
+        form of the packed-word chain below)."""
+        if self._mega is None:
+            self._mega = build_megaprogram(
+                self.programs, mode="chain", name="hidden-stack")
+        return self._mega
 
     # -- execution ----------------------------------------------------------
 
@@ -167,8 +187,19 @@ class LogicClassifier:
         bits = np.asarray(bits, dtype=bool)
         if backend in ("reference", "pallas"):
             return np.asarray(self._chain_runner(backend)(jnp.asarray(bits)))
+        if backend == "megakernel":
+            run = mega_infer_runner(self.megaprogram)
+            return np.asarray(run(jnp.asarray(bits)))
         if backend == "engine":
             eng = engine if engine is not None else self._serve_engine()
+            # route on the ENGINE's compilation target (a caller-supplied
+            # engine may carry its own budget/spec, not the classifier's)
+            if eng.spec.max_gates is None and eng.spec.resolved:
+                # No partition budget: serve the per-layer programs as a
+                # chain-mode megakernel entry — no composed-graph
+                # recompile, stage handoff fused in-kernel.
+                return eng.serve_chain(
+                    [layer.graph for layer in self.layers], bits)
             return eng.serve(self.stacked_graph, bits)
         raise ValueError(f"unknown backend {backend!r}; use one of {BACKENDS}")
 

@@ -43,6 +43,31 @@ from repro.kernels.logic_dsp.ref import apply_step_jnp
 LANE = 128      # lane tile (int32)
 SUBLANE = 8     # sublane tile
 
+# ---------------------------------------------------------------------------
+# launch accounting (counter hook, not timing)
+# ---------------------------------------------------------------------------
+
+_launches = 0
+
+
+def _count_launch() -> None:
+    global _launches
+    _launches += 1
+
+
+def launch_count() -> int:
+    """Number of ``pl.pallas_call`` invocations *issued* so far.
+
+    The counter increments in the Python body of the launch wrappers, so
+    under ``jax.jit`` it counts launches **per trace** (the compiled
+    computation replays exactly those launches on every execution) and in
+    eager mode once per call.  The benchmark harness pins the megakernel
+    row with it: one fresh trace of the fused runner must move the counter
+    by exactly 1, whereas the chained per-layer path moves it once per
+    stage.
+    """
+    return _launches
+
 
 def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref,
                   step_branch_ref, inputs_ref, out_addrs_ref, out_ref,
@@ -68,11 +93,18 @@ def _logic_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref,
     out_ref[...] = jnp.take(buf, out_addrs_ref[...], axis=0)
 
 
-@functools.partial(jax.jit, static_argnames=("n_addr", "block_w", "interpret"))
 def logic_pallas_call(src_a, src_b, dst, opcode, step_branch, input_words,
                       output_addrs, *, n_addr: int, block_w: int = LANE,
                       interpret: bool = True):
     """Launch the kernel over ceil(W / block_w) batch-word blocks.
+
+    Deliberately NOT jit-wrapped at module scope: a global jit cache keys
+    traces on the stream *shapes*, so every distinct (n_steps, n_unit, W)
+    program retraces into one process-wide cache that outlives program
+    eviction and that ``ops.program_arrays``'s per-program memo cannot
+    dedupe.  Callers jit per program instead (``ops.logic_infer_bits``'s
+    per-program runner cache, the engine's per-entry runners), so traces
+    live and die with the program object.
 
     Args:
       src_a/src_b/dst/opcode: (n_steps, n_unit) int32 (n_unit % 8 == 0
@@ -84,6 +116,7 @@ def logic_pallas_call(src_a, src_b, dst, opcode, step_branch, input_words,
     Returns:
       (n_outputs, W) int32.
     """
+    _count_launch()
     n_inputs, w = input_words.shape
     n_outputs = output_addrs.shape[0]
     if w % block_w:
@@ -105,3 +138,102 @@ def logic_pallas_call(src_a, src_b, dst, opcode, step_branch, input_words,
         out_shape=jax.ShapeDtypeStruct((n_outputs, w), jnp.int32),
         interpret=interpret,
     )(src_a, src_b, dst, opcode, step_branch, input_words, output_addrs)
+
+
+# ---------------------------------------------------------------------------
+# megakernel: the whole program pipeline in ONE launch
+# ---------------------------------------------------------------------------
+
+def _mega_kernel(src_a_ref, src_b_ref, dst_ref, opcode_ref, step_branch_ref,
+                 inputs_ref, out_addrs_ref, perm_ref, out_ref, *,
+                 n_addr: int, stage_meta: tuple, chain: bool):
+    """One grid step: run EVERY stage of the pipeline over one batch-word
+    block, the word slab staying resident across stages.
+
+    The stage loop is a *static* Python loop over ``stage_meta``
+    (``(step_lo, step_hi, n_inputs, n_outputs, out_lo)`` per stage — the
+    MegaProgram offset table); each stage runs its step range of the
+    concatenated streams as its own ``fori_loop``.  A gateless stage has
+    ``step_hi == step_lo`` and traces NO loop at all — the zero-trip
+    guard that ``if n_steps:`` provides for monolithic programs must
+    survive per-stage here (a zero-trip ``fori_loop`` body over the
+    concatenated streams cannot trace when total_steps == 0, and tracing
+    one pointlessly costs compile time when it could).
+
+    Chain mode gathers stage *k*'s output rows into a slab that becomes
+    stage *k+1*'s input slice; parallel mode re-reads the primary-input
+    block per stage and re-assembles the per-stage output slabs through
+    ``perm_ref`` in-kernel.  Every stage starts from a freshly
+    re-initialized buffer — the liveness allocator is free to reuse
+    const/input rows as gate destinations, so stage *k*'s final buffer is
+    NOT a valid initial state for stage *k+1*'s address space; rows the
+    re-init does not touch are only ever read after an in-stage write
+    (operands are produced at strictly earlier steps), so stale garbage
+    in them is unobservable.
+    """
+    wb = inputs_ref.shape[1]
+
+    def step(s, buf):
+        a = jnp.take(buf, src_a_ref[s], axis=0)               # (n_unit, Wb)
+        b = jnp.take(buf, src_b_ref[s], axis=0)
+        r = apply_step_jnp(step_branch_ref[s], opcode_ref[s], a, b)
+        return buf.at[dst_ref[s]].set(r)
+
+    feed = inputs_ref[...]
+    slabs = []
+    for (step_lo, step_hi, n_in, n_out, out_lo) in stage_meta:
+        stage_in = feed if chain else inputs_ref[...]
+        buf = jnp.zeros((n_addr, wb), jnp.int32)
+        buf = buf.at[1, :].set(jnp.int32(-1))                 # const-1 row
+        buf = jax.lax.dynamic_update_slice(buf, stage_in, (2, 0))
+        if step_hi > step_lo:          # static; gateless stage: no loop
+            buf = jax.lax.fori_loop(step_lo, step_hi, step, buf)
+        slab = jnp.take(buf, out_addrs_ref[out_lo:out_lo + n_out], axis=0)
+        if chain:
+            feed = slab
+        else:
+            slabs.append(slab)
+    if chain:
+        out_ref[...] = feed
+    else:
+        cat = slabs[0] if len(slabs) == 1 else \
+            jnp.concatenate(slabs, axis=0)
+        out_ref[...] = jnp.take(cat, perm_ref[...], axis=0)
+
+
+def mega_pallas_call(src_a, src_b, dst, opcode, step_branch, input_words,
+                     out_addrs, perm, *, n_addr: int, stage_meta: tuple,
+                     chain: bool, block_w: int = LANE,
+                     interpret: bool = True):
+    """Launch the megakernel: the whole stage pipeline per grid step.
+
+    Args mirror :func:`logic_pallas_call` with the streams concatenated
+    along the step axis (``MegaProgram``), plus the static per-stage
+    offset table, the flattened per-stage output addresses, and the
+    output permutation (identity in chain mode).  Like the monolithic
+    wrapper it is not jit-wrapped here — callers key the trace per
+    MegaProgram object.
+    """
+    _count_launch()
+    n_inputs, w = input_words.shape
+    n_outputs = perm.shape[0]
+    if w % block_w:
+        raise ValueError(f"W={w} must be a multiple of block_w={block_w}")
+    grid = (w // block_w,)
+
+    prog_spec = lambda arr: pl.BlockSpec(arr.shape,
+                                         lambda g, nd=arr.ndim: (0,) * nd)
+    return pl.pallas_call(
+        functools.partial(_mega_kernel, n_addr=n_addr,
+                          stage_meta=stage_meta, chain=chain),
+        grid=grid,
+        in_specs=[
+            prog_spec(src_a), prog_spec(src_b), prog_spec(dst),
+            prog_spec(opcode), prog_spec(step_branch),
+            pl.BlockSpec((n_inputs, block_w), lambda g: (0, g)),
+            prog_spec(out_addrs), prog_spec(perm),
+        ],
+        out_specs=pl.BlockSpec((n_outputs, block_w), lambda g: (0, g)),
+        out_shape=jax.ShapeDtypeStruct((n_outputs, w), jnp.int32),
+        interpret=interpret,
+    )(src_a, src_b, dst, opcode, step_branch, input_words, out_addrs, perm)

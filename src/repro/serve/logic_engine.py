@@ -39,6 +39,7 @@ fixed-shape invocation at maximum word occupancy.
 from __future__ import annotations
 
 import threading
+import time
 import warnings
 from collections import OrderedDict, deque
 from dataclasses import dataclass, field
@@ -53,13 +54,13 @@ from jax.sharding import Mesh
 from repro.core.artifact_store import ArtifactStore
 from repro.core.compiler import CompiledArtifact, LogicCompiler
 from repro.core.errors import PermanentCompileError
-from repro.core.gate_ir import LogicGraph
+from repro.core.gate_ir import LogicGraph, compose_graphs
 from repro.core.packing import WORD_BITS
-from repro.core.scheduler import LogicProgram
+from repro.core.scheduler import LogicProgram, compile_graph
 from repro.core.spec import CompileSpec, resolve_spec, _UNSET
 from repro.kernels.logic_dsp import kernel as _k
-from repro.kernels.logic_dsp.ops import (forward_words, pack_bits_jnp,
-                                         program_arrays, unpack_bits_jnp)
+from repro.kernels.logic_dsp.ops import (mega_arrays, mega_forward_words,
+                                         pack_bits_jnp, unpack_bits_jnp)
 from repro.serve.batcher import SlotTable
 from repro.train.sharding import batch_pspec
 
@@ -349,6 +350,64 @@ class ProgramCache:
                     self._entries.popitem(last=False)
             return entry
 
+    def get_chain(self, graphs, spec: CompileSpec | None = None
+                  ) -> CompiledEntry:
+        """Return (compiling on miss) a *chain* pipeline entry: the stage
+        graphs compiled separately and served as ONE chain-mode megakernel
+        launch (stage k's outputs feed stage k+1 in-kernel).
+
+        Keyed on ``("chain", stage post-opt fingerprints...)`` plus the
+        normalized spec key, so the same layer stack submitted by any
+        producer shares one entry — distinct from the composed graph's
+        monolithic entry, which flattens the stage structure.  Each stage
+        is optimized per ``spec.optimize`` (memoized like :meth:`get`;
+        passes preserve the per-stage I/O interface, so the chain widths
+        still match).  Constraints: ``n_unit`` must be concrete and
+        ``max_gates`` is ignored (a budget that binds needs output-cone
+        partitioning of the composed graph — serve that via :meth:`get`).
+        Chain entries are in-memory only (no artifact-store read/write:
+        the store persists single-graph artifacts).
+        """
+        graphs = tuple(graphs)
+        if not graphs:
+            raise ValueError("get_chain needs at least one stage graph")
+        spec = resolve_spec(spec, caller="ProgramCache.get_chain")
+        if not spec.resolved:
+            raise ValueError(
+                "get_chain needs a concrete n_unit: per-stage "
+                "n_unit='auto' resolution has no single spec to key on — "
+                "serve the composed graph via get() instead")
+        with self._lock:
+            opt = [self._optimized(g, spec) for g in graphs]
+            mono = spec.with_(optimize="none", max_gates=None)
+            key = (("chain",) + tuple(g.fingerprint() for g in opt),
+                   mono.cache_key())
+            entry = self._entries.get(key)
+            if entry is not None:
+                self.hits += 1
+                self._entries.move_to_end(key)
+                return entry
+            self.misses += 1
+            self.compiles += 1
+            t0 = time.perf_counter()
+            try:
+                programs = tuple(compile_graph(g, mono) for g in opt)
+                composed = compose_graphs(
+                    list(opt), name="+".join(g.name for g in graphs))
+            except Exception:
+                self.compile_failures += 1
+                raise
+            artifact = CompiledArtifact(
+                spec=mono, graph=composed, programs=programs,
+                output_perm=np.arange(composed.n_outputs, dtype=np.int64),
+                compile_s=time.perf_counter() - t0, mode="chain")
+            entry = CompiledEntry(key=key, artifact=artifact)
+            self._entries[key] = entry
+            if self.max_entries is not None:
+                while len(self._entries) > self.max_entries:
+                    self._entries.popitem(last=False)
+            return entry
+
     def _alias_fast_path(self, graph: LogicGraph, raw_fp: str,
                          spec: CompileSpec) -> CompiledEntry | None:
         """Warm start WITHOUT the pass pipeline: on first contact with a
@@ -507,6 +566,9 @@ class LogicRequest:
     result: np.ndarray             # (n_samples, n_outputs) bool, filled in
     pending_chunks: int = 0
     done: bool = False
+    #: stage graphs of a chain request (``serve_chain``), retained so an
+    #: LRU-evicted chain entry can recompile; ``None`` = single-graph.
+    chain: tuple | None = None
 
     @property
     def n_samples(self) -> int:
@@ -670,28 +732,27 @@ class LogicEngine:
         return entry
 
     def _build_runner(self, entry: CompiledEntry) -> Callable:
-        """Fused jit: pack -> program pipeline -> permute -> unpack.
+        """Fused jit: pack -> megakernel -> unpack, ONE launch per wave.
 
-        The program streams are closed over as device arrays (already
-        memoized by ``program_arrays``), so the only runtime operand is the
-        fixed-shape ``(capacity, n_inputs)`` bool batch — one trace per
-        registry entry. Partition sub-programs execute back-to-back on the
-        same packed slab; XLA overlaps their independent gather/scatter
-        chains, the in-graph analogue of the simulator's task pipelining.
+        The whole artifact — monolithic, partitioned pipeline, or served
+        chain — executes as a single ``mega_pallas_call``: partition
+        sub-programs run stage-by-stage inside the kernel over the
+        resident word slab with the output permutation applied in-kernel
+        (no per-program launches, no separate re-assembly gather), and
+        chain stages hand off without leaving the kernel.  The streams
+        close over as trace constants (memoized by ``mega_arrays``), so
+        the only runtime operand is the fixed-shape
+        ``(capacity, n_inputs)`` bool batch — one trace per registry
+        entry per engine config.
         """
-        arrs = [program_arrays(p) for p in entry.programs]
-        perm = jnp.asarray(entry.output_perm, jnp.int32)
+        mega = entry.artifact.megaprogram()
+        mega_arrays(mega)       # memoize host streams outside the trace
         kw = dict(block_w=self.block_w, interpret=self.interpret,
                   use_ref=self.use_ref)
 
         def run(bits: jnp.ndarray) -> jnp.ndarray:
             words = pack_bits_jnp(bits)
-            outs = [forward_words(a["src_a"], a["src_b"], a["dst"],
-                                  a["opcode"], a["step_branch"],
-                                  a["output_addrs"], words,
-                                  n_addr=a["n_addr"], **kw) for a in arrs]
-            ow = outs[0] if len(outs) == 1 else jnp.concatenate(outs, axis=0)
-            ow = jnp.take(ow, perm, axis=0)
+            ow = mega_forward_words(mega, words, **kw)
             return unpack_bits_jnp(ow, bits.shape[0])
 
         if self.shard:
@@ -704,17 +765,43 @@ class LogicEngine:
 
     # -- request lifecycle ---------------------------------------------------
 
+    def _chain_entry(self, graphs: tuple) -> CompiledEntry:
+        entry = self.cache.get_chain(graphs, self.spec)
+        if self._exec_key not in entry.runners:
+            entry.runners[self._exec_key] = self._build_runner(entry)
+        return entry
+
     def submit(self, graph: LogicGraph, bits: np.ndarray) -> int:
         """Queue a request; returns its uid (serve with :meth:`step`)."""
         bits = np.asarray(bits, dtype=bool)
         if bits.ndim != 2 or bits.shape[1] != graph.n_inputs:
             raise ValueError(
                 f"inputs must be (n, {graph.n_inputs}), got {bits.shape}")
-        entry = self._entry(graph)
+        return self._admit(self._entry(graph), graph, bits, chain=None)
+
+    def submit_chain(self, graphs, bits: np.ndarray) -> int:
+        """Queue a request against a *stage chain* (e.g. a classifier's
+        per-layer graphs): the stack is compiled per stage and served as
+        one chain-mode megakernel launch per wave — no composed-monolith
+        compile, no per-stage launches.  Stage widths must chain
+        (``graphs[k].n_outputs == graphs[k+1].n_inputs``)."""
+        graphs = tuple(graphs)
+        if not graphs:
+            raise ValueError("submit_chain needs at least one stage graph")
+        bits = np.asarray(bits, dtype=bool)
+        if bits.ndim != 2 or bits.shape[1] != graphs[0].n_inputs:
+            raise ValueError(
+                f"inputs must be (n, {graphs[0].n_inputs}), got "
+                f"{bits.shape}")
+        return self._admit(self._chain_entry(graphs), graphs[0], bits,
+                           chain=graphs)
+
+    def _admit(self, entry: CompiledEntry, graph: LogicGraph,
+               bits: np.ndarray, chain: tuple | None) -> int:
         uid = self._next_uid
         self._next_uid += 1
         req = LogicRequest(
-            uid=uid, key=entry.key, graph=graph, inputs=bits,
+            uid=uid, key=entry.key, graph=graph, inputs=bits, chain=chain,
             result=np.zeros((bits.shape[0], entry.n_outputs), dtype=bool))
         self._requests[uid] = req
         queue = self._queues.setdefault(entry.key, deque())
@@ -771,9 +858,11 @@ class LogicEngine:
         entry = self.cache.peek(key)
         if entry is None:
             # LRU-evicted with requests still queued (max_programs below the
-            # concurrent working set): recompile from the retained graph —
-            # the request must not wedge the queue.
-            entry = self._entry(queue[0].req.graph)
+            # concurrent working set): recompile from the retained graph(s)
+            # — the request must not wedge the queue.
+            req = queue[0].req
+            entry = self._chain_entry(req.chain) if req.chain is not None \
+                else self._entry(req.graph)
         elif self._exec_key not in entry.runners:
             entry.runners[self._exec_key] = self._build_runner(entry)
         admitted: list[tuple[_Chunk, np.ndarray]] = []
@@ -788,7 +877,10 @@ class LogicEngine:
         bits = np.zeros((self.capacity, entry.n_inputs), dtype=bool)
         for chunk, rows in admitted:
             bits[rows] = chunk.req.inputs[chunk.lo:chunk.hi]
-        out = np.asarray(entry.runners[self._exec_key](jnp.asarray(bits)))
+        # hand the numpy slab straight to the jit runner: its C argument
+        # path transfers it far cheaper than an eager jnp.asarray round
+        # trip (which cost more than the kernel itself at small waves)
+        out = np.asarray(entry.runners[self._exec_key](bits))
 
         finished: list[int] = []
         n_active = sum(c.n for c, _ in admitted)
@@ -836,6 +928,12 @@ class LogicEngine:
     def serve(self, graph: LogicGraph, bits: np.ndarray) -> np.ndarray:
         """Synchronous convenience: submit + drain + result."""
         uid = self.submit(graph, bits)
+        self.drain()
+        return self.result(uid)
+
+    def serve_chain(self, graphs, bits: np.ndarray) -> np.ndarray:
+        """Synchronous convenience: submit_chain + drain + result."""
+        uid = self.submit_chain(graphs, bits)
         self.drain()
         return self.result(uid)
 

@@ -336,6 +336,85 @@ def test_engine_serves_gateless_and_constant_graphs(rng):
 
 
 # ---------------------------------------------------------------------------
+# megakernel: the fused single-launch executor must agree bit for bit with
+# the chained per-program kernel AND the numpy oracle, for layer stacks
+# (chain mode) and partitioned pipelines (parallel mode, in-kernel
+# output permutation), across both allocators and n_unit in {8, 64}
+# ---------------------------------------------------------------------------
+
+def _layer_stack(rng, widths):
+    """Chainable random layer graphs: widths[k] inputs -> widths[k+1] outs."""
+    return [random_graph(rng, widths[k], 40 + 30 * k, widths[k + 1],
+                         unary_frac=0.2, locality=16)
+            for k in range(len(widths) - 1)]
+
+
+def _stack_eval(graphs, bits):
+    h = np.asarray(bits, dtype=bool)
+    for g in graphs:
+        h = g.evaluate(h)
+    return h
+
+
+def assert_mega_chain_conformance(graphs, bits, n_units=N_UNITS,
+                                  allocs=ALLOCS) -> None:
+    """Fused chain megakernel == chained per-program launches == numpy."""
+    from repro.core.scheduler import build_megaprogram
+    from repro.kernels.logic_dsp.ops import mega_infer_bits
+    bits = np.asarray(bits, dtype=bool)
+    want = _stack_eval(graphs, bits)
+    for n_unit in n_units:
+        for alloc in allocs:
+            spec = CompileSpec(n_unit=n_unit, alloc=alloc, optimize="none")
+            progs = [compile_graph(g, spec) for g in graphs]
+            ctx = f"n_unit={n_unit} alloc={alloc}"
+            h = bits
+            for p in progs:
+                h = logic_infer_bits(p, h, use_ref=False)
+            assert (h == want).all(), f"chained pallas launches ({ctx})"
+            mega = build_megaprogram(progs, mode="chain")
+            got_np = bits
+            for p in progs:
+                got_np = execute_program_np(p, got_np)
+            assert (got_np == want).all(), f"chained numpy oracle ({ctx})"
+            got_mega = mega_infer_bits(mega, bits, use_ref=False)
+            assert (got_mega == want).all(), f"megakernel ({ctx})"
+            got_mref = mega_infer_bits(mega, bits, use_ref=True)
+            assert (got_mref == want).all(), f"mega jnp reference ({ctx})"
+
+
+@pytest.mark.parametrize("seed,widths",
+                         [(0, (6, 5, 4)),           # 2-layer stack
+                          (1, (8, 7, 5, 3)),        # 3-layer stack
+                          (2, (4, 9, 2))])          # widening then narrowing
+def test_megakernel_chain_conformance(seed, widths):
+    rng = np.random.default_rng(seed)
+    graphs = _layer_stack(rng, widths)
+    assert_mega_chain_conformance(graphs, _bits(rng, 45, widths[0]))
+
+
+@pytest.mark.parametrize("n_unit", N_UNITS)
+@pytest.mark.parametrize("alloc", ALLOCS)
+def test_megakernel_partitioned_conformance(n_unit, alloc):
+    """A genuinely multi-program partitioned artifact fused into one
+    parallel-mode launch (output permutation applied in-kernel)."""
+    from repro.kernels.logic_dsp.ops import mega_infer_bits
+    rng = np.random.default_rng(3)
+    g = random_graph(rng, 10, 200, 6)
+    spec = CompileSpec(n_unit=n_unit, alloc=alloc, optimize="none",
+                       max_gates=16)
+    art = LogicCompiler().compile(g, spec)
+    assert len(art.programs) > 1, "fixture must actually partition"
+    bits = _bits(rng, 45, 10)
+    want = g.evaluate(bits)
+    assert (art.execute(bits) == want).all()
+    mega = art.megaprogram()
+    assert mega.mode == "parallel" and mega.n_stages == len(art.programs)
+    assert (mega_infer_bits(mega, bits, use_ref=False) == want).all()
+    assert (mega_infer_bits(mega, bits, use_ref=True) == want).all()
+
+
+# ---------------------------------------------------------------------------
 # hypothesis property coverage
 # ---------------------------------------------------------------------------
 

@@ -170,7 +170,7 @@ def test_classifier_three_backends_bit_identical(rng):
     bits = input_bits(x)
     acts, logits = hard_forward(params, bits, 3)
     outs = {b: clf.hidden_bits(bits, backend=b)
-            for b in ("reference", "pallas", "engine")}
+            for b in ("reference", "pallas", "megakernel", "engine")}
     for name, h in outs.items():
         assert (h == acts[-1].astype(bool)).all(), name
     assert (clf.predict(x) == np.argmax(logits, -1)).all()
@@ -195,7 +195,7 @@ def test_classifier_optimize_on_off_parity(rng):
                            CompileSpec(n_unit=8))      # default pipeline
     bits = input_bits(x)
     acts, _ = hard_forward(params, bits, 3)
-    for backend in ("reference", "pallas", "engine"):
+    for backend in ("reference", "pallas", "megakernel", "engine"):
         h_raw = raw.hidden_bits(bits, backend=backend)
         h_opt = opt.hidden_bits(bits, backend=backend)
         assert (h_raw == acts[-1].astype(bool)).all(), backend
@@ -274,7 +274,8 @@ def test_run_flow_exact_parity():
     assert report.parity
     assert report.bit_identical
     assert report.exact_mode
-    assert set(report.logic_acc) == {"reference", "pallas", "engine"}
+    assert set(report.logic_acc) == {"reference", "pallas",
+                                     "megakernel", "engine"}
     assert all(acc == report.binarized_acc
                for acc in report.logic_acc.values())
     assert len(report.layers) == 2
