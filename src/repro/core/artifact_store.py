@@ -69,6 +69,7 @@ from pathlib import Path
 
 import numpy as np
 
+from repro.core.calibrate import Calibration, CalibrationError
 from repro.core.compiler import CompiledArtifact
 from repro.core.errors import ArtifactIntegrityError
 from repro.core.gate_ir import LogicGraph
@@ -160,10 +161,11 @@ class ArtifactStore:
         self.root = Path(root)
         self._objects = self.root / "objects"
         self._aliases = self.root / "aliases"
+        self._calibration = self.root / "calibration"
         self._tmp = self.root / "tmp"
         self._quarantine_dir = self.root / "quarantine"
-        for d in (self._objects, self._aliases, self._tmp,
-                  self._quarantine_dir):
+        for d in (self._objects, self._aliases, self._calibration,
+                  self._tmp, self._quarantine_dir):
             d.mkdir(parents=True, exist_ok=True)
         # telemetry (per-instance)
         self.saves = 0
@@ -336,6 +338,77 @@ class ArtifactStore:
         artifact = self.load_key(target)
         self.loads += 1
         return artifact
+
+    # -- calibrations --------------------------------------------------------
+
+    def calibration_path_of(self, name: str = "default") -> Path:
+        """File the calibration record ``name`` lives at (existing or
+        not)."""
+        if not name or "/" in name or name != name.strip() or name in (
+                ".", ".."):
+            raise ValueError(f"invalid calibration name {name!r}")
+        return self._calibration / f"{name}.json"
+
+    def save_calibration(self, calibration: Calibration,
+                         name: str = "default") -> Path:
+        """Persist a fitted wall-clock calibration (core/calibrate.py)
+        under ``calibration/<name>.json`` — same checksummed-record +
+        atomic-publish protocol as alias records, so a warm process
+        loads the fleet's fit instead of re-measuring (the CLI smoke
+        pins ``calibrate.fit_count() == 0`` on the load path).  Unlike
+        content-addressed entries, calibrations are *named* and a
+        re-save replaces the record (a re-fit on the same host should
+        win)."""
+        final = self.calibration_path_of(name)
+        payload = {"format_version": FORMAT_VERSION, "name": name,
+                   "calibration": calibration.to_dict()}
+        record = {"payload": payload,
+                  "checksum": _digest(_canonical_json(payload))}
+        stage = self._stage_path(f"calib.{name}")
+        try:
+            self._write_file(stage, json.dumps(record, indent=1).encode())
+            final.parent.mkdir(parents=True, exist_ok=True)
+            os.replace(stage, final)
+        except BaseException:
+            stage.unlink(missing_ok=True)
+            raise
+        self.saves += 1
+        return final
+
+    def load_calibration(self, name: str = "default"
+                         ) -> Calibration | None:
+        """Verified load of the calibration record ``name``.
+
+        ``None`` on a clean miss.  A present-but-invalid record —
+        flipped bytes, version mismatch, malformed calibration payload —
+        is quarantined and raises :class:`ArtifactIntegrityError`: a
+        corrupt calibration silently steering the design-space search
+        is exactly the failure mode the typed error exists to prevent.
+        """
+        path = self.calibration_path_of(name)
+        if not path.is_file():
+            self.misses += 1
+            return None
+        try:
+            payload = self._verified_manifest_bytes(
+                path, f"calibration record {name!r}")
+            if payload.get("name") != name:
+                raise ArtifactIntegrityError(
+                    f"calibration record {name!r}: payload names "
+                    f"{payload.get('name')!r} — moved or tampered")
+            try:
+                cal = Calibration.from_dict(payload["calibration"])
+            except (CalibrationError, KeyError) as exc:
+                raise ArtifactIntegrityError(
+                    f"calibration record {name!r}: undecodable payload "
+                    f"({exc})") from exc
+        except ArtifactIntegrityError as exc:
+            self.integrity_failures += 1
+            exc.quarantine_path = self._quarantine_path(
+                path, f"calib.{name}")
+            raise
+        self.loads += 1
+        return cal
 
     # -- load ----------------------------------------------------------------
 

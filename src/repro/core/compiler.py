@@ -31,6 +31,8 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.calibrate import (Calibration, CalibrationError,
+                                  WallClockModel)
 from repro.core.cost_model import CostModel, FfclStats, LayerLoad
 from repro.core.gate_ir import LogicGraph
 from repro.core.optimizer import SearchResult, binary_search
@@ -122,6 +124,14 @@ class CompiledArtifact:
 
     def stats(self) -> dict:
         per_prog = [p.stats() for p in self.programs]
+        search = {}
+        if self.search is not None:
+            search = {"search_probes": len(self.search.evaluations),
+                      "search_objective": self.search.objective}
+            if self.search.alt is not None:
+                # the other objective's pick, for DSE provenance
+                search["alt_objective"] = self.search.alt.objective
+                search["alt_n_unit"] = self.search.alt.best_n_unit
         return {
             "spec": self.spec.to_dict(),
             "n_programs": len(self.programs),
@@ -129,8 +139,7 @@ class CompiledArtifact:
             "n_steps": sum(s["n_steps"] for s in per_prog),
             "depth": max((s["depth"] for s in per_prog), default=0),
             "compile_s": self.compile_s,
-            **({"search_probes": len(self.search.evaluations)}
-               if self.search is not None else {}),
+            **search,
         }
 
 
@@ -146,11 +155,17 @@ class LogicCompiler:
 
     def __init__(self, model: CostModel | None = None,
                  n_unit_max: int = 4096, n_unit_min: int = 1,
-                 n_input_vectors: int = 1024, fault_hook=None):
+                 n_input_vectors: int = 1024, fault_hook=None,
+                 calibration: Calibration | None = None):
         self.model = model or CostModel()
         self.n_unit_max = n_unit_max
         self.n_unit_min = n_unit_min
         self.n_input_vectors = n_input_vectors
+        # Fitted per-phase wall-clock calibration (core/calibrate.py).
+        # Required for specs with objective="wallclock"; when present,
+        # cycles-objective resolutions also record the wallclock pick in
+        # the search provenance (SearchResult.alt) and vice versa.
+        self.calibration = calibration
         # Optional ``hook(graph, spec)`` called at the top of every
         # :meth:`compile` — the seam fault injection uses to raise a
         # :class:`~repro.core.errors.TransientCompileError` with seeded
@@ -172,14 +187,42 @@ class LogicCompiler:
         re-running the pipeline when ``graph`` already reflects
         ``spec.optimize`` (e.g. the serving registry's memoized
         optimized graph).
+
+        ``spec.objective`` picks the search objective: ``"cycles"``
+        descends the modelled eq. 22 cycles (the default, and identical
+        to the pre-knob behavior); ``"wallclock"`` descends the
+        calibrated per-phase seconds model and requires this compiler to
+        carry a fitted ``Calibration`` — without one it raises
+        :class:`~repro.core.calibrate.CalibrationError` (callers fall
+        back to ``objective="cycles"`` explicitly; the serving registry
+        does so with a warning).  When a calibration is present, BOTH
+        objectives' picks are resolved and the non-chosen one is
+        recorded as ``search.alt`` — the DSE provenance shows what the
+        other objective would have picked.
         """
         if spec.resolved:
             return spec, None
         stats = FfclStats.from_graph(
             graph, optimized=False if assume_optimized else spec)
-        search = binary_search(
-            self.model, [LayerLoad(stats, 1, self.n_input_vectors)],
-            n_unit_max=self.n_unit_max, n_unit_min=self.n_unit_min)
+        layers = [LayerLoad(stats, 1, self.n_input_vectors)]
+        bounds = dict(n_unit_max=self.n_unit_max, n_unit_min=self.n_unit_min)
+        if spec.objective == "wallclock":
+            if self.calibration is None:
+                raise CalibrationError(
+                    "spec requests objective='wallclock' but this "
+                    "LogicCompiler has no calibration; fit one "
+                    "(core/calibrate.py, tools/calibrate.py) or use "
+                    "objective='cycles'")
+            wc = WallClockModel(self.calibration, self.model)
+            search = binary_search(wc, layers, objective="wallclock",
+                                   **bounds)
+            search.alt = binary_search(self.model, layers, **bounds)
+        else:
+            search = binary_search(self.model, layers, **bounds)
+            if self.calibration is not None:
+                wc = WallClockModel(self.calibration, self.model)
+                search.alt = binary_search(wc, layers,
+                                           objective="wallclock", **bounds)
         return spec.with_(n_unit=search.best_n_unit), search
 
     # -- the one compile path -----------------------------------------------

@@ -46,10 +46,12 @@ Address allocation strategies:
 from __future__ import annotations
 
 import itertools
+import time
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core import calibrate as _calibrate
 from repro.core.gate_ir import (CONST0, CONST1, LogicGraph, MIXED_DISPATCH,
                                 OpCode, apply_op)
 from repro.core.levelize import Levelization, levelize
@@ -596,15 +598,27 @@ def execute_program_np(prog: LogicProgram, inputs: np.ndarray) -> np.ndarray:
     itself is tested against direct ``LogicGraph.evaluate``. Homogeneous
     steps apply one bulk op to the whole (n_unit, W) slab; only mixed tail
     steps fall back to per-opcode masking (never a per-unit Python loop).
+
+    While a :class:`~repro.core.calibrate.PhaseTimer` is active, the run
+    records its pack / setup (buffer init + input scatter) / kernel
+    (step loop) / unpack split on the timer (``backend="numpy"``) — the
+    same phase shape the jitted path reports, so the calibration
+    tooling can compare backends.  Disabled, the check is one module
+    attribute read.
     """
+    timer = _calibrate._ACTIVE
+    t = time.perf_counter
+    t0 = t()
     inputs = np.asarray(inputs)
     batch = inputs.shape[0]
     words = packing.pack_bits(inputs.astype(np.uint8))       # (n_inputs, W)
+    t1 = t()
     w = words.shape[1]
     buf = np.zeros((prog.n_addr, w), dtype=np.int32)
     buf[1] = -1  # const-1 row = all ones
     buf[prog.input_addrs] = words
     branch = prog.step_branch
+    t2 = t()
     for s in range(prog.n_steps):
         a = buf[prog.src_a[s]]
         b = buf[prog.src_b[s]]
@@ -618,5 +632,11 @@ def execute_program_np(prog: LogicProgram, inputs: np.ndarray) -> np.ndarray:
                 lanes = ops_row == oc
                 res[lanes] = apply_op(int(oc), a[lanes], b[lanes])
         buf[prog.dst[s]] = res
+    t3 = t()
     out_words = buf[prog.output_addrs]
-    return packing.unpack_bits(out_words, batch)
+    out = packing.unpack_bits(out_words, batch)
+    if timer is not None:
+        timer.record({"pack": t1 - t0, "setup": t2 - t1, "kernel": t3 - t2,
+                      "unpack": t() - t3},
+                     backend="numpy", n_unit=prog.n_unit, batch=batch)
+    return out

@@ -91,6 +91,17 @@ class CompileSpec:
         aware entry points (``LogicCompiler``, ``ProgramCache``,
         ``partition``) split graphs above it; the monolithic primitive
         ``compile_graph`` documents that it ignores it.
+    objective:
+        What ``n_unit="auto"`` minimizes: ``"cycles"`` (default — the
+        paper's modelled eq. 22 cycles) or ``"wallclock"`` (the
+        measurement-calibrated per-phase seconds model of
+        core/calibrate.py; needs a ``LogicCompiler`` carrying a fitted
+        ``Calibration``, else resolution raises ``CalibrationError``).
+        Irrelevant once ``n_unit`` is concrete: the knob steers the
+        search, not the emitted program, so it is NOT part of
+        :meth:`cache_key` and serializes only when non-default
+        (``objective="cycles"`` specs round-trip byte-identically to
+        pre-knob records).
     """
 
     n_unit: object = 64                  # int >= 1 | "auto"
@@ -99,6 +110,7 @@ class CompileSpec:
     fuse_levels: bool = True
     optimize: object = "default"         # normalized: PassManager | "none"
     max_gates: int | None = None
+    objective: str = "cycles"            # "cycles" | "wallclock"
 
     def __post_init__(self):
         n = self.n_unit
@@ -120,6 +132,10 @@ class CompileSpec:
             raise ValueError(
                 f"max_gates must be an int >= 1 or None, "
                 f"got {self.max_gates!r}")
+        if self.objective not in ("cycles", "wallclock"):
+            raise ValueError(
+                f"unknown objective {self.objective!r}; "
+                "use 'cycles' or 'wallclock'")
         # normalize the optimize knob once, at the boundary: equal targets
         # compare equal however they were spelled, and `.pipeline` below
         # never re-resolves.
@@ -210,7 +226,9 @@ class CompileSpec:
         ``optimize`` serializes as ``"none"`` or ``"default"``; a custom
         :class:`PassManager` has no declarative serial form, so it
         raises — benchmarks/reports that record specs stick to the named
-        pipelines.
+        pipelines.  ``objective`` is emitted only when non-default, so
+        every ``"cycles"`` spec (all pre-knob records, BENCH rows, and
+        store aliases) keeps its exact historical serial form.
         """
         if self.pipeline is None:
             opt = "none"
@@ -220,10 +238,13 @@ class CompileSpec:
             raise ValueError(
                 f"custom pass pipeline {self.pipeline!r} is not "
                 "JSON-serializable; only 'none'/'default' round-trip")
-        return {"n_unit": self.n_unit, "alloc": self.alloc,
-                "opcode_sort": self.opcode_sort,
-                "fuse_levels": self.fuse_levels,
-                "optimize": opt, "max_gates": self.max_gates}
+        d = {"n_unit": self.n_unit, "alloc": self.alloc,
+             "opcode_sort": self.opcode_sort,
+             "fuse_levels": self.fuse_levels,
+             "optimize": opt, "max_gates": self.max_gates}
+        if self.objective != "cycles":
+            d["objective"] = self.objective
+        return d
 
     @classmethod
     def from_dict(cls, d: dict) -> "CompileSpec":

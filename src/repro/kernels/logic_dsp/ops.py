@@ -13,10 +13,13 @@ pin the contract.
 """
 from __future__ import annotations
 
+import time
+
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import calibrate as _calibrate
 from repro.core.scheduler import LogicProgram, MegaProgram
 from repro.kernels.logic_dsp import kernel as _k
 from repro.kernels.logic_dsp.ref import logic_forward_ref
@@ -185,11 +188,113 @@ def infer_runner(prog: LogicProgram, block_w: int = _k.LANE,
 def logic_infer_bits(prog: LogicProgram, bits: np.ndarray | jnp.ndarray,
                      block_w: int = _k.LANE, interpret: bool = True,
                      use_ref: bool = False) -> np.ndarray:
-    """Boolean convenience wrapper: (batch, n_inputs) -> (batch, n_outputs)."""
+    """Boolean convenience wrapper: (batch, n_inputs) -> (batch, n_outputs).
+
+    While a :class:`~repro.core.calibrate.PhaseTimer` is active the call
+    routes through :func:`phased_infer_bits` and records its per-phase
+    wall-clock split on the timer; disabled (the default), the check is
+    one module-attribute read — zero overhead on the fused hot path.
+    """
+    timer = _calibrate._ACTIVE
+    if timer is not None:
+        out, phases = phased_infer_bits(prog, bits, block_w=block_w,
+                                        interpret=interpret, use_ref=use_ref)
+        timer.record(phases, backend="ref" if use_ref else "pallas",
+                     n_unit=prog.n_unit,
+                     batch=int(np.asarray(bits).shape[0]))
+        return out
     bits = jnp.asarray(bits, dtype=bool)
     run = infer_runner(prog, block_w=block_w, interpret=interpret,
                        use_ref=use_ref)
     return np.asarray(run(bits))
+
+
+# ---------------------------------------------------------------------------
+# phase-split execution (calibration measurement path, DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+def _host_streams(prog: LogicProgram, pad_unit: int = 8) -> dict:
+    """The :func:`program_arrays` padding, but as HOST numpy arrays and
+    memoized separately — the phased path re-uploads them every call so
+    the ``setup`` phase times an actual program-stream transfer instead
+    of a device-cache hit."""
+    cached = getattr(prog, "_phase_host_arrays", None)
+    if cached is not None and cached[0] == pad_unit:
+        return cached[1]
+    pad = (-prog.n_unit) % pad_unit
+
+    def p(a, fill):
+        a = np.asarray(a, dtype=np.int32)
+        if pad:
+            a = np.pad(a, ((0, 0), (0, pad)), constant_values=fill)
+        return a
+
+    arrs = {
+        "src_a": p(prog.src_a, 0), "src_b": p(prog.src_b, 0),
+        "dst": p(prog.dst, prog.trash_addr), "opcode": p(prog.opcode, 0),
+        "step_branch": np.asarray(prog.step_branch, dtype=np.int32),
+        "output_addrs": np.asarray(prog.output_addrs, dtype=np.int32),
+    }
+    object.__setattr__(prog, "_phase_host_arrays", (pad_unit, arrs))
+    return arrs
+
+
+def phased_infer_bits(prog: LogicProgram, bits: np.ndarray | jnp.ndarray,
+                      block_w: int = _k.LANE, interpret: bool = True,
+                      use_ref: bool = False
+                      ) -> tuple[np.ndarray, dict[str, float]]:
+    """One inference split into the four calibration phases.
+
+    Returns ``(out, phases)`` where ``phases`` maps each of
+    ``core.calibrate.PHASES`` to seconds, each boundary forced with
+    ``block_until_ready`` so async dispatch cannot smear a phase into
+    its neighbour:
+
+        pack    H2D of the boolean batch + jitted bit packing
+        setup   fresh device_put of every program stream (what the
+                memoized fast path amortizes away)
+        kernel  the jitted program execution over packed words
+        unpack  jitted unpacking + D2H of the result
+
+    The output is bit-identical to :func:`logic_infer_bits` (same kernel
+    body, pinned by tests); only the fusion boundaries differ, which is
+    why the fused runner — not this path — stays the serving hot path.
+    Runners are cached per program object like :func:`infer_runner`.
+    """
+    cache = _runner_cache(prog)
+    key = ("phases", block_w, interpret, use_ref)
+    fns = cache.get(key)
+    if fns is None:
+        def compute(streams, words):
+            _count_trace()
+            return forward_words(
+                streams["src_a"], streams["src_b"], streams["dst"],
+                streams["opcode"], streams["step_branch"],
+                streams["output_addrs"], words, n_addr=prog.n_addr,
+                block_w=block_w, interpret=interpret, use_ref=use_ref)
+
+        fns = (jax.jit(pack_bits_jnp), jax.jit(compute),
+               jax.jit(unpack_bits_jnp, static_argnums=(1,)))
+        cache[key] = fns
+    pack_fn, compute_fn, unpack_fn = fns
+    host = _host_streams(prog)
+    batch = int(np.asarray(bits).shape[0])
+    t = time.perf_counter
+
+    t0 = t()
+    dev_bits = jax.block_until_ready(jnp.asarray(bits, dtype=bool))
+    words = jax.block_until_ready(pack_fn(dev_bits))
+    t1 = t()
+    streams = jax.block_until_ready(
+        {k: jax.device_put(v) for k, v in host.items()})
+    t2 = t()
+    out_words = jax.block_until_ready(compute_fn(streams, words))
+    t3 = t()
+    out = np.asarray(jax.block_until_ready(unpack_fn(out_words, batch)))
+    t4 = t()
+    phases = {"pack": t1 - t0, "setup": t2 - t1, "kernel": t3 - t2,
+              "unpack": t4 - t3}
+    return out, phases
 
 
 # ---------------------------------------------------------------------------

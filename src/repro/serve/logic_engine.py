@@ -52,6 +52,7 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
 from repro.core.artifact_store import ArtifactStore
+from repro.core.calibrate import CalibrationError
 from repro.core.compiler import CompiledArtifact, LogicCompiler
 from repro.core.errors import PermanentCompileError
 from repro.core.gate_ir import LogicGraph, compose_graphs
@@ -196,12 +197,15 @@ class ProgramCache:
         # compiled programs + device arrays, and a memo hit is what keeps
         # re-admitted evictees from re-running the pass pipeline).
         self._opt_memo: OrderedDict[tuple, LogicGraph] = OrderedDict()
-        # post-opt fingerprint -> resolved n_unit for n_unit="auto"
-        # specs: the design-space search (levelize + binary_search
-        # probes) must run once per distinct structure, not once per
-        # request — the hot path stays O(1) per repeat.  The cache's
-        # single compiler fixes the remaining search inputs.
-        self._auto_memo: OrderedDict[object, int] = OrderedDict()
+        # (post-opt fingerprint, spec.objective) -> resolved n_unit for
+        # n_unit="auto" specs: the design-space search (levelize +
+        # binary_search probes) must run once per distinct structure,
+        # not once per request — the hot path stays O(1) per repeat.
+        # The objective is part of the key because "cycles" and
+        # "wallclock" searches legitimately pick different unit counts
+        # for the same structure; the cache's single compiler fixes the
+        # remaining search inputs.
+        self._auto_memo: OrderedDict[tuple, int] = OrderedDict()
         self.hits = 0
         self.misses = 0
         self.compiles = 0           # actual compiler invocations (a miss
@@ -213,6 +217,22 @@ class ProgramCache:
         self.store_failures = 0     # corrupt entry: quarantined, recompiled
         self.store_saves = 0        # write-through persists after compile
         self.store_save_failures = 0
+        # Warm-start the wall-clock calibration too: a compiler with no
+        # fitted calibration picks up the store's persisted "default"
+        # fit, so a fresh process can serve objective="wallclock" specs
+        # with zero re-fits (fit_count() == 0 — same contract as the
+        # zero-compile warm start).  Best-effort: a corrupt record is
+        # quarantined at the store layer and serving degrades to the
+        # cycles objective (see :meth:`_resolved`).
+        if store is not None and self.compiler.calibration is None:
+            try:
+                self.compiler.calibration = store.load_calibration()
+            except PermanentCompileError as exc:
+                self.store_failures += 1
+                warnings.warn(
+                    f"calibration warm start failed: {exc!r}; "
+                    "objective='wallclock' will fall back to 'cycles'",
+                    RuntimeWarning, stacklevel=2)
 
     @property
     def _opt_memo_bound(self) -> int | None:
@@ -447,7 +467,7 @@ class ProgramCache:
             while len(self._opt_memo) > bound:
                 self._opt_memo.popitem(last=False)
         if not spec.resolved:
-            self._auto_memo[opt_fp] = artifact.spec.n_unit
+            self._auto_memo[(opt_fp, spec.objective)] = artifact.spec.n_unit
         key = (opt_fp, artifact.spec.cache_key())
         entry = self._entries.get(key)
         if entry is not None:       # admitted meanwhile via another raw form
@@ -516,17 +536,33 @@ class ProgramCache:
 
     def _resolved(self, graph: LogicGraph, spec: CompileSpec) -> CompileSpec:
         """Resolve ``n_unit="auto"`` for ``graph`` (memoized): repeat
-        requests must not re-run the design-space search."""
+        requests must not re-run the design-space search.
+
+        A ``wallclock`` objective on a compiler with no fitted
+        calibration degrades to the ``cycles`` objective with a
+        :class:`RuntimeWarning` — serving must not 500 on a missing
+        calibration file; the typed
+        :class:`~repro.core.calibrate.CalibrationError` makes the
+        fallback explicit and the warning makes it visible."""
         if spec.resolved:
             return spec
-        # the search depends only on the (post-opt) graph stats and the
-        # cache's one compiler, so the structure alone keys the memo
-        memo_key = graph.fingerprint()
+        # the search depends only on the (post-opt) graph stats, the
+        # objective, and the cache's one compiler
+        memo_key = (graph.fingerprint(), spec.objective)
         with self._lock:
             n_unit = self._auto_memo.get(memo_key)
             if n_unit is None:
-                resolved, _ = self.compiler.resolve(graph, spec,
-                                                    assume_optimized=True)
+                try:
+                    resolved, _ = self.compiler.resolve(
+                        graph, spec, assume_optimized=True)
+                except CalibrationError as exc:
+                    warnings.warn(
+                        f"objective={spec.objective!r} resolution failed "
+                        f"({exc}); falling back to objective='cycles'",
+                        RuntimeWarning, stacklevel=2)
+                    resolved, _ = self.compiler.resolve(
+                        graph, spec.with_(objective="cycles"),
+                        assume_optimized=True)
                 n_unit = resolved.n_unit
                 self._auto_memo[memo_key] = n_unit
                 bound = self._opt_memo_bound

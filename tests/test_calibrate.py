@@ -1,0 +1,551 @@
+"""Wall-clock calibration (core/calibrate.py) + objective threading.
+
+What must hold (DESIGN.md §12): phase-timing hooks cost nothing when
+disabled and record a bit-identical execution when enabled; degenerate
+fit inputs raise typed ``CalibrationError`` (never a NaN factor steering
+the DSE); calibrations round-trip through JSON and the artifact store
+with corruption failing loudly; ``objective="wallclock"`` threads
+through spec -> compiler -> serving with an explicit cycles fallback;
+and the plateau-edge ``binary_search`` agrees EXACTLY with an
+exhaustive sweep under both objectives (deterministic seeds always;
+hypothesis widens the coverage when installed).
+"""
+import json
+import math
+
+import numpy as np
+import pytest
+
+from repro.core import calibrate
+from repro.core.calibrate import (Calibration, CalibrationError, PHASES,
+                                  PHASE_REGRESSORS, PhaseFit, PhaseProbe,
+                                  PhaseTimer, WallClockModel, fit_calibration,
+                                  phase_terms)
+from repro.core.compiler import LogicCompiler
+from repro.core.cost_model import (CostModel, FfclStats, LayerLoad,
+                                   n_subkernels)
+from repro.core.gate_ir import random_graph
+from repro.core.optimizer import binary_search, sweep
+from repro.core.scheduler import compile_graph, execute_program_np
+from repro.core.spec import CompileSpec
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # tier-1 containers may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+
+MODEL = CostModel()
+
+
+def _graph(seed=0, n_in=12, n_gates=150, n_out=8):
+    return random_graph(np.random.default_rng(seed), n_in, n_gates, n_out,
+                        locality=32)
+
+
+def _probe(label, stats, n_unit, measured, n_gates=100):
+    return PhaseProbe(label=label, n_unit=n_unit, n_input_vectors=256,
+                      n_gates=n_gates,
+                      terms=phase_terms(MODEL, stats, n_unit, 256),
+                      measured=measured)
+
+
+def _linear_probes(coefs=None, offsets=None, units=(4, 8, 16, 32, 64),
+                   graph_seeds=(0, 1, 2)):
+    """Probes whose measurements are EXACTLY linear in the phase
+    regressors — the fit must recover them to machine precision.
+
+    Spans BOTH grid axes (workload x n_unit): pack/unpack regressors are
+    n_unit-independent, so a single-graph grid would be zero-variance.
+    """
+    coefs = coefs or {p: tuple(1e-7 * (i + 1)
+                               for i in range(len(PHASE_REGRESSORS[p])))
+                      for p in PHASES}
+    offsets = offsets or {p: 1e-4 for p in PHASES}
+    probes = []
+    for seed in graph_seeds:
+        # pack/unpack regressors scale with the input/output widths, so
+        # the workload axis must vary those (mirrors default_probe_graphs)
+        stats = FfclStats.from_graph(
+            _graph(seed=seed, n_in=12 + 8 * seed, n_gates=100 + 80 * seed,
+                   n_out=6 + 4 * seed))
+        for u in units:
+            terms = phase_terms(MODEL, stats, u, 256)
+            measured = {p: sum(c * t for c, t in zip(coefs[p], terms[p]))
+                        + offsets[p] for p in PHASES}
+            probes.append(_probe("lin", stats, u, measured))
+    return probes, coefs, offsets
+
+
+def _synthetic_calibration():
+    """A hand-built calibration (no measurement) for objective tests."""
+    fits = {p: PhaseFit(coefs=tuple(1e-7 for _ in PHASE_REGRESSORS[p]),
+                        offset=1e-4, n_probes=5, median_abs_rel_err=0.01)
+            for p in PHASES}
+    return Calibration(fits=fits, meta={"synthetic": True})
+
+
+# ---------------------------------------------------------------------------
+# phase-timing hooks
+# ---------------------------------------------------------------------------
+
+def test_phase_timer_disabled_by_default():
+    assert calibrate.active_timer() is None
+
+
+def test_phase_timer_records_pallas_path_bit_identical():
+    from repro.kernels.logic_dsp.ops import logic_infer_bits
+    g = _graph()
+    prog = compile_graph(g, CompileSpec(n_unit=16, optimize="none"))
+    rng = np.random.default_rng(1)
+    bits = rng.integers(0, 2, (64, g.n_inputs)).astype(bool)
+    plain = logic_infer_bits(prog, bits)
+    with PhaseTimer() as t:
+        timed = logic_infer_bits(prog, bits)
+    assert calibrate.active_timer() is None          # restored on exit
+    assert (timed == plain).all(), "phased path must be bit-identical"
+    assert len(t.samples) == 1
+    sample = t.samples[0]
+    assert set(sample["phases"]) == set(PHASES)
+    assert all(v >= 0.0 for v in sample["phases"].values())
+    assert sample["meta"]["backend"] == "pallas"
+    assert sample["meta"]["n_unit"] == 16
+    assert sample["meta"]["batch"] == 64
+
+
+def test_phase_timer_records_numpy_oracle():
+    g = _graph(seed=2)
+    prog = compile_graph(g, CompileSpec(n_unit=8, optimize="none"))
+    rng = np.random.default_rng(2)
+    bits = rng.integers(0, 2, (32, g.n_inputs)).astype(bool)
+    with PhaseTimer() as t:
+        out = execute_program_np(prog, bits)
+    assert (out == g.evaluate(bits)).all()
+    assert len(t.samples) == 1
+    assert set(t.samples[0]["phases"]) == set(PHASES)
+    assert t.samples[0]["meta"]["backend"] == "numpy"
+
+
+def test_phase_timer_nests_and_restores():
+    outer = PhaseTimer()
+    with outer:
+        with PhaseTimer() as inner:
+            assert calibrate.active_timer() is inner
+        assert calibrate.active_timer() is outer
+    assert calibrate.active_timer() is None
+
+
+def test_phased_infer_matches_plain_and_reference():
+    from repro.kernels.logic_dsp.ops import (logic_infer_bits,
+                                             phased_infer_bits)
+    g = _graph(seed=3, n_gates=200)
+    prog = compile_graph(g, CompileSpec(n_unit=16, optimize="none"))
+    rng = np.random.default_rng(3)
+    bits = rng.integers(0, 2, (96, g.n_inputs)).astype(bool)
+    out, phases = phased_infer_bits(prog, bits)
+    assert (out == logic_infer_bits(prog, bits)).all()
+    assert (out == g.evaluate(bits)).all()
+    assert set(phases) == set(PHASES)
+    assert all(math.isfinite(v) and v >= 0.0 for v in phases.values())
+
+
+# ---------------------------------------------------------------------------
+# phase <-> regressor mapping
+# ---------------------------------------------------------------------------
+
+def test_phase_terms_arity_matches_declared_regressors():
+    stats = FfclStats.from_graph(_graph())
+    terms = phase_terms(MODEL, stats, 16, 256)
+    assert set(terms) == set(PHASES)
+    for p in PHASES:
+        assert len(terms[p]) == len(PHASE_REGRESSORS[p])
+
+
+def test_phase_terms_kernel_width_uses_lane_padding():
+    """The executed slab width is n_unit padded to the kernel's sublane
+    multiple (NOP rows still execute) — the width regressor must see the
+    padded width, or unaligned unit counts are under-predicted."""
+    stats = FfclStats.from_graph(_graph())
+    for u in (9, 22, 39):
+        nsk = float(n_subkernels(stats, u))
+        padded = -(-u // calibrate.PAD_UNIT) * calibrate.PAD_UNIT
+        assert phase_terms(MODEL, stats, u, 256)["kernel"] == (nsk,
+                                                               nsk * padded)
+    # aligned counts are unchanged
+    nsk = float(n_subkernels(stats, 16))
+    assert phase_terms(MODEL, stats, 16, 256)["kernel"] == (nsk, nsk * 16)
+
+
+def test_phase_terms_pack_is_unit_independent():
+    stats = FfclStats.from_graph(_graph())
+    assert (phase_terms(MODEL, stats, 4, 256)["pack"]
+            == phase_terms(MODEL, stats, 128, 256)["pack"])
+
+
+# ---------------------------------------------------------------------------
+# fitting: recovery + degenerate inputs
+# ---------------------------------------------------------------------------
+
+def test_fit_recovers_exact_linear_measurements():
+    probes, coefs, offsets = _linear_probes()
+    cal = fit_calibration(probes)
+    for p in PHASES:
+        f = cal.fits[p]
+        np.testing.assert_allclose(f.coefs, coefs[p], rtol=1e-6, atol=1e-12)
+        np.testing.assert_allclose(f.offset, offsets[p], rtol=1e-6)
+        assert f.median_abs_rel_err < 1e-6
+    assert cal.median_abs_rel_err() < 1e-6
+
+
+def test_fit_increments_fit_count():
+    before = calibrate.fit_count()
+    fit_calibration(_linear_probes()[0])
+    assert calibrate.fit_count() == before + 1
+
+
+def test_fit_clamps_coefficients_nonnegative():
+    """Adversarial measurements decreasing in the regressor must clamp
+    to coef=0 (offset-only), never a negative seconds-per-cycle."""
+    probes, _, _ = _linear_probes()
+    flipped = [PhaseProbe(label=p.label, n_unit=p.n_unit,
+                          n_input_vectors=p.n_input_vectors,
+                          n_gates=p.n_gates, terms=p.terms,
+                          measured={ph: 1e-3 - v for ph, v in
+                                    p.measured.items()})
+               for p in probes]
+    cal = fit_calibration(flipped)
+    for p in PHASES:
+        assert all(c >= 0.0 for c in cal.fits[p].coefs)
+        assert cal.fits[p].offset >= 0.0
+
+
+def test_fit_rejects_single_probe():
+    probes, _, _ = _linear_probes(units=(16,), graph_seeds=(0,))
+    with pytest.raises(CalibrationError, match=">= 2 probes"):
+        fit_calibration(probes)
+
+
+def test_fit_rejects_gateless_probes():
+    probes, _, _ = _linear_probes()
+    gateless = [PhaseProbe(label="empty", n_unit=p.n_unit,
+                           n_input_vectors=p.n_input_vectors, n_gates=0,
+                           terms=p.terms, measured=p.measured)
+                for p in probes]
+    with pytest.raises(CalibrationError, match="gateless"):
+        fit_calibration(gateless)
+
+
+def test_fit_rejects_zero_variance_regressor():
+    probes, _, _ = _linear_probes(units=(16, 16, 16), graph_seeds=(0,))
+    with pytest.raises(CalibrationError, match="zero-variance"):
+        fit_calibration(probes)
+
+
+def test_fit_rejects_nonfinite_measurements():
+    probes, _, _ = _linear_probes()
+    bad = probes[:-1] + [PhaseProbe(
+        label=probes[-1].label, n_unit=probes[-1].n_unit,
+        n_input_vectors=256, n_gates=100, terms=probes[-1].terms,
+        measured={**probes[-1].measured, "kernel": float("nan")})]
+    with pytest.raises(CalibrationError, match="non-finite"):
+        fit_calibration(bad)
+
+
+def test_fit_rejects_negative_measurements():
+    probes, _, _ = _linear_probes()
+    bad = probes[:-1] + [PhaseProbe(
+        label=probes[-1].label, n_unit=probes[-1].n_unit,
+        n_input_vectors=256, n_gates=100, terms=probes[-1].terms,
+        measured={**probes[-1].measured, "pack": -1e-6})]
+    with pytest.raises(CalibrationError, match="negative measured"):
+        fit_calibration(bad)
+
+
+# ---------------------------------------------------------------------------
+# Calibration object: validation + serialization
+# ---------------------------------------------------------------------------
+
+def test_calibration_roundtrip():
+    cal = fit_calibration(_linear_probes()[0], meta={"host": "x"})
+    back = Calibration.from_dict(cal.to_dict())
+    assert back.fits == cal.fits
+    assert back.meta == cal.meta
+    # and the dict itself is json-stable
+    assert json.loads(json.dumps(cal.to_dict())) == cal.to_dict()
+
+
+def test_calibration_rejects_missing_phase():
+    cal = _synthetic_calibration()
+    fits = {p: f for p, f in cal.fits.items() if p != "kernel"}
+    with pytest.raises(CalibrationError, match="missing phase"):
+        Calibration(fits=fits)
+
+
+def test_calibration_rejects_nonfinite_factors():
+    fits = dict(_synthetic_calibration().fits)
+    fits["pack"] = PhaseFit(coefs=(float("nan"),), offset=0.0,
+                            n_probes=2, median_abs_rel_err=0.0)
+    with pytest.raises(CalibrationError, match="non-finite/negative"):
+        Calibration(fits=fits)
+    fits["pack"] = PhaseFit(coefs=(1e-7,), offset=-1e-9,
+                            n_probes=2, median_abs_rel_err=0.0)
+    with pytest.raises(CalibrationError, match="non-finite/negative"):
+        Calibration(fits=fits)
+
+
+def test_calibration_from_dict_rejects_bad_records():
+    good = _synthetic_calibration().to_dict()
+    with pytest.raises(CalibrationError, match="format_version"):
+        Calibration.from_dict({**good, "format_version": 99})
+    with pytest.raises(CalibrationError, match="must be a dict"):
+        Calibration.from_dict("nope")
+    with pytest.raises(CalibrationError, match="'phases'"):
+        Calibration.from_dict({"format_version": 1})
+    broken = json.loads(json.dumps(good))
+    del broken["phases"]["kernel"]["coefs"]
+    with pytest.raises(CalibrationError, match="malformed"):
+        Calibration.from_dict(broken)
+
+
+def test_predict_rejects_arity_mismatch():
+    cal = _synthetic_calibration()
+    with pytest.raises(CalibrationError, match="regressor"):
+        cal.fits["kernel"].predict((1.0,))      # kernel expects 2
+
+
+# ---------------------------------------------------------------------------
+# WallClockModel
+# ---------------------------------------------------------------------------
+
+def test_wallclock_model_seconds_and_cycles():
+    cal = _synthetic_calibration()
+    wc = WallClockModel(cal)
+    stats = FfclStats.from_graph(_graph())
+    layers = [LayerLoad(stats, 2, 256)]
+    s1 = wc.network_seconds(layers, 16)
+    assert s1 > 0 and math.isfinite(s1)
+    # n_copies scales linearly; parallel_factor divides
+    assert wc.network_seconds([LayerLoad(stats, 4, 256)], 16) \
+        == pytest.approx(2 * s1)
+    assert wc.network_seconds(layers, 16, parallel_factor=2) \
+        == pytest.approx(s1 / 2)
+    # the cycles view delegates to the wrapped cycles model exactly
+    assert wc.network_cycles(layers, 16) \
+        == MODEL.network_cycles(layers, 16)
+
+
+def test_wallclock_model_requires_calibration():
+    with pytest.raises(CalibrationError, match="needs a Calibration"):
+        WallClockModel("not a calibration")
+
+
+# ---------------------------------------------------------------------------
+# store persistence
+# ---------------------------------------------------------------------------
+
+def test_store_calibration_roundtrip(tmp_path):
+    from repro.core.artifact_store import ArtifactStore
+    store = ArtifactStore(tmp_path / "store")
+    cal = fit_calibration(_linear_probes()[0], meta={"grid": "test"})
+    path = store.save_calibration(cal)
+    assert path.is_file()
+    loaded = store.load_calibration()
+    assert loaded is not None
+    assert loaded.fits == cal.fits and loaded.meta == cal.meta
+
+
+def test_store_calibration_miss_returns_none(tmp_path):
+    from repro.core.artifact_store import ArtifactStore
+    store = ArtifactStore(tmp_path / "store")
+    assert store.load_calibration() is None
+    assert store.misses == 1
+
+
+def test_store_calibration_corruption_quarantines(tmp_path):
+    from repro.core.artifact_store import ArtifactStore
+    from repro.core.errors import ArtifactIntegrityError
+    store = ArtifactStore(tmp_path / "store")
+    path = store.save_calibration(fit_calibration(_linear_probes()[0]))
+    raw = path.read_text().replace('"offset": ', '"offset": 9')
+    path.write_text(raw)
+    with pytest.raises(ArtifactIntegrityError, match="checksum"):
+        store.load_calibration()
+    assert store.integrity_failures == 1
+    assert store.quarantined == 1
+    assert not path.is_file(), "corrupt record must leave the namespace"
+    assert store.load_calibration() is None     # now a clean miss
+
+
+def test_store_calibration_rejects_bad_names(tmp_path):
+    from repro.core.artifact_store import ArtifactStore
+    store = ArtifactStore(tmp_path / "store")
+    for name in ("", "a/b", "..", " pad "):
+        with pytest.raises(ValueError, match="invalid calibration name"):
+            store.calibration_path_of(name)
+
+
+# ---------------------------------------------------------------------------
+# objective threading: spec -> compiler -> serving
+# ---------------------------------------------------------------------------
+
+def test_resolve_wallclock_requires_calibration():
+    g = _graph()
+    with pytest.raises(CalibrationError, match="no calibration"):
+        LogicCompiler().resolve(
+            g, CompileSpec(n_unit="auto", objective="wallclock"))
+
+
+def test_resolve_wallclock_records_both_objectives():
+    g = _graph(n_gates=300)
+    compiler = LogicCompiler(calibration=_synthetic_calibration(),
+                             n_unit_max=256)
+    spec, search = compiler.resolve(
+        g, CompileSpec(n_unit="auto", objective="wallclock"))
+    assert spec.resolved and spec.n_unit == search.best_n_unit
+    assert search.objective == "wallclock"
+    assert search.alt is not None and search.alt.objective == "cycles"
+    # and the mirror image: a cycles resolve on a calibrated compiler
+    # records the wallclock pick as provenance
+    spec_c, search_c = compiler.resolve(g, CompileSpec(n_unit="auto"))
+    assert search_c.objective == "cycles"
+    assert search_c.alt.objective == "wallclock"
+    assert search_c.alt.best_n_unit == search.best_n_unit
+
+
+def test_cycles_objective_resolution_unchanged_by_calibration():
+    """The paper-exact default: the cycles pick must be identical with
+    and without a calibration attached (the calibration only ADDS
+    provenance, never steers the default objective)."""
+    g = _graph(n_gates=300)
+    plain, s_plain = LogicCompiler(n_unit_max=256).resolve(
+        g, CompileSpec(n_unit="auto"))
+    calib, s_calib = LogicCompiler(
+        calibration=_synthetic_calibration(), n_unit_max=256).resolve(
+        g, CompileSpec(n_unit="auto"))
+    assert plain == calib
+    assert s_plain.best_n_unit == s_calib.best_n_unit
+    assert [e for e in s_plain.evaluations] == \
+        [e for e in s_calib.evaluations]
+
+
+def test_artifact_stats_record_search_provenance():
+    g = _graph(n_gates=300)
+    compiler = LogicCompiler(calibration=_synthetic_calibration(),
+                             n_unit_max=256)
+    art = compiler.compile(g, CompileSpec(n_unit="auto",
+                                          objective="wallclock",
+                                          optimize="none"))
+    st = art.stats()
+    assert st["search_objective"] == "wallclock"
+    assert st["alt_objective"] == "cycles"
+    assert st["search_probes"] > 0
+    assert isinstance(st["alt_n_unit"], int)
+
+
+def test_program_cache_wallclock_falls_back_with_warning():
+    from repro.serve import ProgramCache
+    cache = ProgramCache()                       # no calibration anywhere
+    g = _graph(n_gates=200)
+    spec = CompileSpec(n_unit="auto", objective="wallclock")
+    with pytest.warns(RuntimeWarning, match="falling back"):
+        entry = cache.get(g, spec)
+    assert entry.spec.resolved
+    # the fallback memoizes under the REQUESTED objective: repeat
+    # requests stay O(1) and warn only once
+    assert (cache._optimized(g, spec).fingerprint(), "wallclock") \
+        in cache._auto_memo
+    import warnings as w
+    with w.catch_warnings():
+        w.simplefilter("error")
+        assert cache.get(g, spec) is entry
+
+
+def test_program_cache_memoizes_objectives_separately():
+    from repro.serve import ProgramCache
+    cache = ProgramCache(
+        compiler=LogicCompiler(calibration=_synthetic_calibration(),
+                               n_unit_max=256))
+    g = _graph(n_gates=300)
+    cache.get(g, CompileSpec(n_unit="auto"))
+    cache.get(g, CompileSpec(n_unit="auto", objective="wallclock"))
+    fp = cache._optimized(g, CompileSpec(n_unit="auto")).fingerprint()
+    assert (fp, "cycles") in cache._auto_memo
+    assert (fp, "wallclock") in cache._auto_memo
+
+
+def test_program_cache_warm_starts_calibration_from_store(tmp_path):
+    from repro.core.artifact_store import ArtifactStore
+    from repro.serve import ProgramCache
+    store = ArtifactStore(tmp_path / "store")
+    cal = fit_calibration(_linear_probes()[0])
+    store.save_calibration(cal)
+    before = calibrate.fit_count()
+    cache = ProgramCache(store=ArtifactStore(tmp_path / "store"))
+    assert cache.compiler.calibration is not None
+    assert cache.compiler.calibration.fits == cal.fits
+    assert calibrate.fit_count() == before, "warm start must never re-fit"
+    # an explicit compiler calibration is never overridden by the store
+    own = LogicCompiler(calibration=_synthetic_calibration())
+    cache2 = ProgramCache(compiler=own,
+                          store=ArtifactStore(tmp_path / "store"))
+    assert cache2.compiler.calibration.meta == {"synthetic": True}
+
+
+# ---------------------------------------------------------------------------
+# property: binary_search == exhaustive sweep, both objectives
+# ---------------------------------------------------------------------------
+
+def _random_layers(rng, n_layers):
+    layers = []
+    for _ in range(n_layers):
+        g = random_graph(rng, int(rng.integers(6, 16)),
+                         int(rng.integers(40, 400)),
+                         int(rng.integers(4, 12)),
+                         locality=int(rng.integers(16, 64)))
+        layers.append(LayerLoad(FfclStats.from_graph(g),
+                                int(rng.integers(1, 4)),
+                                int(rng.integers(64, 1024))))
+    return layers
+
+
+def _objective_models():
+    return [("cycles", MODEL),
+            ("wallclock", WallClockModel(_synthetic_calibration(), MODEL))]
+
+
+def _assert_search_matches_sweep(layers, lo, hi, objective, model):
+    res = binary_search(model, layers, n_unit_max=hi, n_unit_min=lo,
+                        objective=objective)
+    swp = sweep(model, layers, range(lo, hi + 1), objective=objective)
+    assert res.best_n_unit == swp.best_n_unit, \
+        (f"{objective}: binary_search picked {res.best_n_unit}, "
+         f"exhaustive sweep {swp.best_n_unit} on [{lo}, {hi}]")
+    assert res.best_cycles == pytest.approx(swp.best_cycles)
+    # every probe lands in range, each exactly once
+    probed = [u for u, _ in res.evaluations]
+    assert all(lo <= u <= hi for u in probed)
+    assert len(probed) == len(set(probed))
+
+
+@pytest.mark.parametrize("objective,model", _objective_models())
+@pytest.mark.parametrize("seed", range(8))
+def test_binary_search_matches_exhaustive_sweep(seed, objective, model):
+    rng = np.random.default_rng(seed)
+    layers = _random_layers(rng, int(rng.integers(1, 4)))
+    lo = int(rng.integers(1, 8))
+    hi = int(rng.integers(lo + 4, 260))
+    _assert_search_matches_sweep(layers, lo, hi, objective, model)
+
+
+if HAVE_HYPOTHESIS:
+    @settings(max_examples=25, deadline=None)
+    @given(seed=st.integers(0, 2 ** 31 - 1),
+           lo=st.integers(1, 12), span=st.integers(4, 300),
+           objective_idx=st.integers(0, 1))
+    def test_hypothesis_search_matches_sweep(seed, lo, span, objective_idx):
+        rng = np.random.default_rng(seed)
+        layers = _random_layers(rng, int(rng.integers(1, 3)))
+        objective, model = _objective_models()[objective_idx]
+        _assert_search_matches_sweep(layers, lo, lo + span, objective,
+                                     model)

@@ -155,10 +155,45 @@ def test_json_round_trip():
     for s in (CompileSpec(),
               CompileSpec(n_unit="auto", max_gates=500),
               CompileSpec.paper_exact(128),
+              CompileSpec(n_unit="auto", objective="wallclock"),
               CompileSpec(n_unit=7, alloc="direct", opcode_sort=False,
                           optimize="none")):
         d = json.loads(json.dumps(s.to_dict()))     # through real JSON
         assert CompileSpec.from_dict(d) == s
+
+
+def test_objective_validated_and_default_pinned():
+    assert CompileSpec().objective == "cycles"
+    assert CompileSpec(objective="wallclock").objective == "wallclock"
+    for bad in ("seconds", "", 1, None):
+        with pytest.raises(ValueError):
+            CompileSpec(objective=bad)
+
+
+def test_explicit_cycles_objective_byte_identical_to_default():
+    """The paper-exact default must stay byte-identical: an explicit
+    objective="cycles" spec serializes, cache-keys, and compares exactly
+    like a spec that never mentioned the field — so every historical
+    serialized spec, cache key, and store artifact is unchanged."""
+    default, explicit = CompileSpec(n_unit=16), CompileSpec(
+        n_unit=16, objective="cycles")
+    assert default == explicit
+    assert default.to_dict() == explicit.to_dict()
+    assert "objective" not in default.to_dict()
+    assert json.dumps(default.to_dict(), sort_keys=True) == \
+        json.dumps(explicit.to_dict(), sort_keys=True)
+    assert default.cache_key() == explicit.cache_key()
+
+
+def test_objective_excluded_from_cache_key():
+    """The objective steers WHICH n_unit the DSE picks; once resolved,
+    the compiled streams depend only on the resolved spec — the same
+    (graph, resolved spec) must land on one cache entry regardless of
+    which objective chose it."""
+    a = CompileSpec(n_unit=16, objective="wallclock")
+    b = CompileSpec(n_unit=16)
+    assert a.cache_key() == b.cache_key()
+    assert a.to_dict()["objective"] == "wallclock"   # but it serializes
 
 
 def test_json_rejects_custom_pipeline_and_unknown_keys():
