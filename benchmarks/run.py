@@ -369,6 +369,76 @@ def bench_warm_start(quick: bool) -> None:
 
 
 # ---------------------------------------------------------------------------
+# static schedule verifier: proof overhead vs the compile it certifies
+# ---------------------------------------------------------------------------
+
+def bench_verify(quick: bool) -> None:
+    """``verify.overhead.*`` / ``verify.load.*`` rows (DESIGN.md §13):
+    what the static schedule verifier costs, gated in-bench.
+
+      * ``verify.overhead.<case>``: added wall-clock of compiling with
+        ``verify="compile"`` over the same compile with the verifier
+        off — the price of turning the knob on.  Asserted ``<= 25%`` of
+        the unverified compile for both the monolithic and the
+        partitioned case (the partitioned proof reuses the clusters the
+        compiler just derived, so it does not re-pay partitioning);
+      * ``verify.load.<case>``: standalone ``verify_artifact`` on the
+        finished artifact — the store-load / CLI audit path.  For
+        partitioned artifacts this INCLUDES the deterministic partition
+        re-derivation (the load path's trust anchor), so it is
+        reported, not gated against the compile.
+
+    Every timed proof is also asserted clean (zero diagnostics).
+    Schema in benchmarks/README.md."""
+    from repro.core.compiler import LogicCompiler
+    from repro.core.verify import verify_artifact
+
+    rng = np.random.default_rng(13)
+    g = random_graph(rng, 24, 1500 if quick else 4000, 12, locality=96)
+    reps = 3 if quick else 5
+    comp = LogicCompiler()
+    cases = [("mono", CompileSpec(n_unit=64)),
+             ("partitioned", CompileSpec(
+                 n_unit=64, max_gates=400 if quick else 1000))]
+    def once(fn):
+        t0 = time.perf_counter()
+        fn()
+        return time.perf_counter() - t0
+
+    for label, spec in cases:
+        # interleaved off/on pairs with one unmeasured warmup pair, min
+        # per side: common-mode host noise (the surrounding harness is
+        # busy) cancels instead of landing entirely on one variant
+        comp.compile(g, spec)
+        comp.compile(g, spec.with_(verify="compile"))
+        off, on = [], []
+        for _ in range(reps):
+            off.append(once(lambda: comp.compile(g, spec)))
+            on.append(once(lambda: comp.compile(
+                g, spec.with_(verify="compile"))))
+        off, on = min(off), min(on)
+        overhead = max(on - off, 0.0)
+        ratio = overhead / max(off, 1e-9)
+        assert ratio <= 0.25, \
+            f"{label}: verify overhead {ratio:.1%} exceeds the 25% gate"
+        art = comp.compile(g, spec)
+        t_load, report = None, None
+        for _ in range(reps):
+            t0 = time.perf_counter()
+            report = verify_artifact(art)
+            dt = time.perf_counter() - t0
+            t_load = dt if t_load is None else min(t_load, dt)
+        assert report.ok, report.summary()
+        row(f"verify.overhead.{label}", overhead * 1e6,
+            f"ratio={ratio:.3f} compile_us={off * 1e6:.0f} "
+            f"programs={len(art.programs)} diagnostics=0 gate<=0.25",
+            spec=spec)
+        row(f"verify.load.{label}", t_load * 1e6,
+            f"steps={report.checked['steps']} "
+            f"terms={report.checked['terms']} diagnostics=0", spec=spec)
+
+
+# ---------------------------------------------------------------------------
 # wall-clock calibration: phase fit quality + objective="wallclock" DSE
 # ---------------------------------------------------------------------------
 
@@ -730,6 +800,7 @@ def main() -> None:
     bench_kernels(args.quick)
     bench_serve_logic(args.quick)
     bench_warm_start(args.quick)
+    bench_verify(args.quick)
     bench_calibration(args.quick)
     bench_serve_traffic(args.quick)
     bench_flow_e2e(args.quick)

@@ -75,6 +75,7 @@ from repro.core.errors import ArtifactIntegrityError
 from repro.core.gate_ir import LogicGraph
 from repro.core.scheduler import LogicProgram
 from repro.core.spec import CompileSpec
+from repro.core.verify import verify_artifact
 
 #: On-disk format version.  Bump on ANY schema change (manifest keys,
 #: array set, dtype contract): readers refuse entries whose version
@@ -155,10 +156,18 @@ class ArtifactStore:
 
     Args:
       root: store directory (created, with substructure, if missing).
+      verify_on_load: when True, every loaded artifact additionally runs
+        the static schedule verifier (core/verify.py, DESIGN.md §13)
+        before being returned: checksums prove the *bytes* round-tripped,
+        the verifier proves the *schedule* still computes the manifest's
+        graph.  A verifier-rejected entry is treated exactly like a
+        checksum failure — quarantined + ``ArtifactIntegrityError``.
     """
 
-    def __init__(self, root: str | os.PathLike):
+    def __init__(self, root: str | os.PathLike, *,
+                 verify_on_load: bool = False):
         self.root = Path(root)
+        self.verify_on_load = bool(verify_on_load)
         self._objects = self.root / "objects"
         self._aliases = self.root / "aliases"
         self._calibration = self.root / "calibration"
@@ -539,10 +548,17 @@ class ArtifactStore:
             raise ArtifactIntegrityError(
                 f"store entry {path.name}: rebuilt graph fingerprint "
                 f"{rebuilt_fp} != requested {fingerprint} — wrong program")
-        return CompiledArtifact(
+        artifact = CompiledArtifact(
             spec=CompileSpec.from_dict(payload["spec"]), graph=graph,
             programs=programs, output_perm=output_perm,
             compile_s=float(payload["compile_s"]))
+        if self.verify_on_load:
+            report = verify_artifact(artifact)
+            if not report.ok:
+                raise ArtifactIntegrityError(
+                    f"store entry {path.name}: schedule verification "
+                    f"failed — {report.summary()}")
+        return artifact
 
     # -- quarantine ----------------------------------------------------------
 

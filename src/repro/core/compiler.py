@@ -40,6 +40,8 @@ from repro.core.partition import (compile_partitions, output_permutation,
                                   partition)
 from repro.core.scheduler import LogicProgram, compile_graph
 from repro.core.spec import CompileSpec
+from repro.core.verify import (ScheduleVerificationError, certify_remap,
+                               effective_mode, verify_artifact)
 
 
 @dataclass(frozen=True)
@@ -156,11 +158,19 @@ class LogicCompiler:
     def __init__(self, model: CostModel | None = None,
                  n_unit_max: int = 4096, n_unit_min: int = 1,
                  n_input_vectors: int = 1024, fault_hook=None,
-                 calibration: Calibration | None = None):
+                 calibration: Calibration | None = None,
+                 verify: str | None = None):
         self.model = model or CostModel()
         self.n_unit_max = n_unit_max
         self.n_unit_min = n_unit_min
         self.n_input_vectors = n_input_vectors
+        # Compiler-level static-verification default (core/verify.py):
+        # applied when a spec does not opt in itself (spec.verify="off").
+        # "compile"/"full" prove every artifact this facade emits and
+        # raise ScheduleVerificationError on any Diagnostic.
+        if verify not in (None, "off", "compile", "load", "full"):
+            raise ValueError(f"unknown verify mode {verify!r}")
+        self.verify = verify
         # Fitted per-phase wall-clock calibration (core/calibrate.py).
         # Required for specs with objective="wallclock"; when present,
         # cycles-objective resolutions also record the wallclock pick in
@@ -244,11 +254,29 @@ class LogicCompiler:
         if self.fault_hook is not None:
             self.fault_hook(graph, spec)
         t0 = time.perf_counter()
+        verifying = effective_mode(spec.verify, self.verify) in (
+            "compile", "full")
         pipeline = spec.pipeline
-        g = graph if (assume_optimized or pipeline is None) \
-            else pipeline.run(graph).graph
+        if assume_optimized or pipeline is None:
+            g = graph
+        elif verifying:
+            # keep the composed wire remap so the pass pipeline's own
+            # certificate (total, in-range output map — V115) is proven
+            # alongside the schedule; certify=True additionally checks
+            # each individual pass so a broken rewrite names its pass
+            opt = pipeline.run(graph, certify=True)
+            remap_diags = certify_remap(graph, opt.graph, opt.remap,
+                                        label=f"pipeline({graph.name})")
+            if remap_diags:
+                from repro.core.verify import VerifyReport
+                raise ScheduleVerificationError(VerifyReport(
+                    target=graph.name, diagnostics=tuple(remap_diags)))
+            g = opt.graph
+        else:
+            g = pipeline.run(graph).graph
         spec, search = self.resolve(g, spec, assume_optimized=True)
         mono = spec.with_(optimize="none", max_gates=None)
+        parts = None
         if spec.max_gates is not None and g.n_gates > spec.max_gates:
             # per-cluster re-optimization: extraction re-exposes slack
             # inside duplicated cones that global passes could not see
@@ -258,6 +286,15 @@ class LogicCompiler:
         else:
             programs = (compile_graph(g, mono),)
             perm = np.arange(g.n_outputs, dtype=np.int64)
-        return CompiledArtifact(
+        artifact = CompiledArtifact(
             spec=spec, graph=g, programs=programs, output_perm=perm,
             compile_s=time.perf_counter() - t0, search=search)
+        if verifying:
+            # a fresh artifact failing its own static proof is a
+            # compiler bug — loud, typed, never served; the clusters
+            # just scheduled are handed over so the proof does not pay
+            # for a redundant partition re-derivation (load-path
+            # verification re-derives — there the clusters are not
+            # in hand)
+            verify_artifact(artifact, parts=parts).raise_if_failed()
+        return artifact

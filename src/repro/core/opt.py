@@ -479,7 +479,16 @@ class PassManager:
                       for p in self.passes),
                 self.max_iters)
 
-    def run(self, graph: LogicGraph) -> OptResult:
+    def run(self, graph: LogicGraph, *, certify: bool = False) -> OptResult:
+        """Run the pipeline to a fixed point.
+
+        ``certify=True`` (the ``verify="compile"/"full"`` path,
+        core/verify.py) checks every individual pass's wire remap
+        against the certificate — total and in-range on outputs,
+        constants/inputs fixed — and raises
+        ``ScheduleVerificationError`` naming the offending pass, so a
+        broken rewrite is localized to the pass that emitted it instead
+        of surfacing as a composed-map failure at the end."""
         from repro.core.levelize import levelize   # local import, no cycle
         cur = graph
         remap = identity_remap(graph)
@@ -492,6 +501,19 @@ class PassManager:
             for p in self.passes:
                 before = cur.n_gates
                 res = p.run(cur)
+                if certify:
+                    # lazy import: verify is a leaf module, but keep the
+                    # zero-cost default path import-free
+                    from repro.core.verify import (
+                        ScheduleVerificationError, VerifyReport,
+                        certify_remap)
+                    diags = certify_remap(
+                        cur, res.graph, res.remap,
+                        label=f"{self.name}:{p.name}[iter {iters}]")
+                    if diags:
+                        raise ScheduleVerificationError(VerifyReport(
+                            target=graph.name,
+                            diagnostics=tuple(diags)))
                 remap = compose_remaps(remap, res.remap)
                 stats.append({"pass": p.name, "gates_in": before,
                               "gates_out": res.graph.n_gates})

@@ -32,6 +32,8 @@ from repro.core.gate_ir import CONST0, CONST1, LogicGraph, OpCode, UNARY
 from repro.core.opt import resolve_pipeline
 from repro.core.scheduler import LogicProgram, compile_graph
 from repro.core.spec import CompileSpec, resolve_spec, _UNSET
+from repro.core.verify import (ScheduleVerificationError, VerifyReport,
+                               certify_remap)
 
 
 def output_cones(graph: LogicGraph) -> list[set]:
@@ -126,7 +128,9 @@ def partition(graph: LogicGraph, max_gates: int | CompileSpec, *,
             raise ValueError(
                 "partition needs a budget: spec.max_gates must be set")
         max_gates, pipeline = spec.max_gates, spec.pipeline
+        certify = spec.verify in ("compile", "full")
     else:
+        certify = False
         import warnings
         from repro.core.spec import DEPRECATION_PREFIX
         if optimize is _UNSET:
@@ -160,7 +164,17 @@ def partition(graph: LogicGraph, max_gates: int | CompileSpec, *,
     for _, members in clusters:
         sub = _extract(graph, members)
         if pipeline is not None:
-            sub = pipeline.run(sub).graph
+            res = pipeline.run(sub)
+            if certify:
+                # per-cluster remap certificate (verify="compile"/"full",
+                # DESIGN.md §13): the rewrite must map the cone's outputs
+                # totally and in range before its program is trusted
+                diags = certify_remap(sub, res.graph, res.remap,
+                                      label=f"partition({sub.name})")
+                if diags:
+                    raise ScheduleVerificationError(VerifyReport(
+                        target=sub.name, diagnostics=tuple(diags)))
+            sub = res.graph
         parts.append(Partition(graph=sub, output_indices=members))
     return parts
 

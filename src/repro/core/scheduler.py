@@ -529,6 +529,24 @@ def build_megaprogram(programs, mode: str = "chain",
     n_unit = max(p.n_unit for p in programs)
     n_addr = max(p.n_addr for p in programs)
 
+    # Trash-row isolation (DESIGN.md §13): every padding lane and
+    # step_trash entry below points at the owning stage's trash row,
+    # and the megakernel re-initializes rows 0..1+n_inputs (consts +
+    # input slice) at every stage boundary.  A trash row aliasing one
+    # of those preload rows would let NOP padding clobber a live
+    # const/input mid-stage.  Both allocators only ever hand out fresh
+    # rows past the preload region, so a violation here means the
+    # program came from an untrusted payload (LogicProgram.from_payload
+    # does not validate semantics) — refuse loudly rather than fuse a
+    # schedule the static verifier would reject.
+    for k, p in enumerate(programs):
+        if not (2 + p.n_inputs <= p.trash_addr < p.n_addr):
+            raise ValueError(
+                f"stage {k} ({p.name!r}): trash_addr {p.trash_addr} "
+                f"aliases a const/input row (or exceeds n_addr "
+                f"{p.n_addr}); refusing to build a megaprogram whose "
+                "padding lanes would clobber live preload rows")
+
     streams = {"src_a": [], "src_b": [], "dst": [], "opcode": []}
     branch, trash, out_addrs, meta = [], [], [], []
     step_lo = out_lo = 0

@@ -111,6 +111,17 @@ class CompileSpec:
     optimize: object = "default"         # normalized: PassManager | "none"
     max_gates: int | None = None
     objective: str = "cycles"            # "cycles" | "wallclock"
+    #: Static schedule verification (core/verify.py, DESIGN.md §13):
+    #: ``"off"`` (default), ``"compile"`` (prove every freshly compiled
+    #: artifact), ``"load"`` (re-prove store-loaded / alias-resolved
+    #: artifacts before serving — the §10.4 alias-trust closure), or
+    #: ``"full"`` (both; the CI setting).  Purely *operational*: it
+    #: never changes the emitted streams, so it is excluded from
+    #: :meth:`cache_key`, from equality/hashing (``compare=False``),
+    #: and from :meth:`to_dict` — store keys, alias records, and BENCH
+    #: rows stay byte-identical across verify-on and verify-off fleets
+    #: (``from_dict`` still accepts the key for CLI convenience).
+    verify: str = dataclasses.field(default="off", compare=False)
 
     def __post_init__(self):
         n = self.n_unit
@@ -136,6 +147,10 @@ class CompileSpec:
             raise ValueError(
                 f"unknown objective {self.objective!r}; "
                 "use 'cycles' or 'wallclock'")
+        if self.verify not in ("off", "compile", "load", "full"):
+            raise ValueError(
+                f"unknown verify mode {self.verify!r}; use "
+                "'off', 'compile', 'load', or 'full'")
         # normalize the optimize knob once, at the boundary: equal targets
         # compare equal however they were spelled, and `.pipeline` below
         # never re-resolves.

@@ -51,7 +51,7 @@ import numpy as np
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh
 
-from repro.core.artifact_store import ArtifactStore
+from repro.core.artifact_store import ArtifactStore, store_key
 from repro.core.calibrate import CalibrationError
 from repro.core.compiler import CompiledArtifact, LogicCompiler
 from repro.core.errors import PermanentCompileError
@@ -59,6 +59,7 @@ from repro.core.gate_ir import LogicGraph, compose_graphs
 from repro.core.packing import WORD_BITS
 from repro.core.scheduler import LogicProgram, compile_graph
 from repro.core.spec import CompileSpec, resolve_spec, _UNSET
+from repro.core.verify import effective_mode, verify_artifact
 from repro.kernels.logic_dsp import kernel as _k
 from repro.kernels.logic_dsp.ops import (mega_arrays, mega_forward_words,
                                          pack_bits_jnp, unpack_bits_jnp)
@@ -217,6 +218,10 @@ class ProgramCache:
         self.store_failures = 0     # corrupt entry: quarantined, recompiled
         self.store_saves = 0        # write-through persists after compile
         self.store_save_failures = 0
+        self.verifies = 0           # schedule-verifier runs (verify="load"/
+        #                             "full" load paths + chain compiles)
+        self.verify_failures = 0    # verifier-rejected loads: quarantined,
+        #                             recompiled (DESIGN.md §13)
         # Warm-start the wall-clock calibration too: a compiler with no
         # fitted calibration picks up the store's persisted "default"
         # fit, so a fresh process can serve objective="wallclock" specs
@@ -414,13 +419,21 @@ class ProgramCache:
                 programs = tuple(compile_graph(g, mono) for g in opt)
                 composed = compose_graphs(
                     list(opt), name="+".join(g.name for g in graphs))
+                artifact = CompiledArtifact(
+                    spec=mono, graph=composed, programs=programs,
+                    output_perm=np.arange(composed.n_outputs,
+                                          dtype=np.int64),
+                    compile_s=time.perf_counter() - t0, mode="chain")
+                if effective_mode(spec.verify,
+                                  getattr(self.compiler, "verify", None)
+                                  ) in ("compile", "full"):
+                    # chain entries bypass the LogicCompiler facade, so
+                    # the verify="compile" gate lives here
+                    self.verifies += 1
+                    verify_artifact(artifact).raise_if_failed()
             except Exception:
                 self.compile_failures += 1
                 raise
-            artifact = CompiledArtifact(
-                spec=mono, graph=composed, programs=programs,
-                output_perm=np.arange(composed.n_outputs, dtype=np.int64),
-                compile_s=time.perf_counter() - t0, mode="chain")
             entry = CompiledEntry(key=key, artifact=artifact)
             self._entries[key] = entry
             if self.max_entries is not None:
@@ -458,6 +471,11 @@ class ProgramCache:
             return None
         if artifact is None:
             return None
+        # verify BEFORE seeding the memos: a schedule-invalid artifact's
+        # graph must never be trusted as "the optimized form" either
+        if not self._verify_loaded(artifact, spec,
+                                   label=f"alias fp={raw_fp[:12]}"):
+            return None             # falls through to the normal path
         # seed the memos the normal path would have filled, so repeat
         # requests for this structure never leave memory
         opt_fp = artifact.graph.fingerprint()
@@ -483,6 +501,43 @@ class ProgramCache:
                 self._entries.popitem(last=False)
         return entry
 
+    def _verify_loaded(self, artifact: CompiledArtifact,
+                       req_spec: CompileSpec, *, label: str) -> bool:
+        """Gate a store-loaded artifact behind the static schedule
+        verifier (``verify="load"``/``"full"`` — DESIGN.md §13).
+
+        Store checksums prove the bytes round-tripped; the verifier
+        proves the *schedule* still computes the recorded graph — the
+        one trust hole §10.4 left open (an entry that was wrong when
+        written verifies its checksums forever).  A rejected artifact is
+        quarantined at the store (so no other process serves it either)
+        and ``False`` sends this request to a clean compile: detection
+        must degrade the fleet to cold-start latency, never to wrong
+        bits.  ``True`` = passed or exempt (mode off/compile-only).
+        """
+        mode = effective_mode(req_spec.verify,
+                              getattr(self.compiler, "verify", None))
+        if mode not in ("load", "full"):
+            return True
+        self.verifies += 1
+        report = verify_artifact(artifact)
+        if report.ok:
+            return True
+        self.verify_failures += 1
+        qpath = None
+        if self.store is not None:
+            try:
+                qpath = self.store.quarantine(store_key(
+                    artifact.graph.fingerprint(), artifact.spec))
+            except Exception:           # noqa: BLE001 — quarantine is
+                qpath = None            # best-effort; rejection is not
+        warnings.warn(
+            f"store-loaded artifact rejected by schedule verifier "
+            f"({label}): {report.summary()}; quarantined -> {qpath}; "
+            "falling back to a clean compile",
+            RuntimeWarning, stacklevel=3)
+        return False
+
     def _store_load(self, fingerprint: str, spec: CompileSpec
                     ) -> CompiledArtifact | None:
         """Store-hit-before-compile: a verified artifact, or ``None`` on
@@ -501,6 +556,9 @@ class ProgramCache:
         if artifact is None:
             self.store_misses += 1
             return None
+        if not self._verify_loaded(artifact, spec,
+                                   label=f"entry fp={fingerprint[:12]}"):
+            return None             # rejected: caller compiles cleanly
         self.store_hits += 1
         return artifact
 
@@ -583,6 +641,8 @@ class ProgramCache:
                     "store_failures": self.store_failures,
                     "store_saves": self.store_saves,
                     "store_save_failures": self.store_save_failures,
+                    "verifies": self.verifies,
+                    "verify_failures": self.verify_failures,
                     "programs": sum(len(e.programs)
                                     for e in self._entries.values())}
 

@@ -296,7 +296,7 @@ def test_cache_write_through_then_warm_start(tmp_path, rng):
         "entries": 1, "hits": 0, "misses": 1, "compiles": 1,
         "compile_failures": 0, "store_hits": 0, "store_misses": 1,
         "store_failures": 0, "store_saves": 1, "store_save_failures": 0,
-        "programs": 1}
+        "verifies": 0, "verify_failures": 0, "programs": 1}
     # a brand-new cache over the same store: zero compiles, by counter
     warm = ProgramCache(store=ArtifactStore(tmp_path))
     w_entry = warm.get(g, spec)

@@ -17,7 +17,15 @@ The degenerate-cover section is the regression suite for espresso/NullaNet
 corners: constant-true / constant-false neurons, empty ISF care-sets,
 pass-through and constant outputs, gateless programs — ``layer_to_graph``
 must never emit a graph any backend cannot simulate.
+
+``REPRO_VERIFY=full`` (or ``compile``) additionally runs the static
+schedule verifier (core/verify.py, DESIGN.md §13) over every program and
+megaprogram this suite compiles — the CI ``verify`` job's way of proving
+the whole conformance matrix carries zero diagnostics, not just agreeing
+at runtime on the sampled input batches.
 """
+import os
+
 import numpy as np
 import pytest
 
@@ -43,6 +51,16 @@ except ImportError:           # tier-1 containers may lack hypothesis
 N_UNITS = (8, 64)
 ALLOCS = ("direct", "liveness")
 
+# "off" => runtime agreement only; "compile"/"full" => every program the
+# matrix compiles must ALSO prove clean statically (CI verify job)
+VERIFY_MODE = os.environ.get("REPRO_VERIFY", "off")
+
+
+def _maybe_verify(prog, graph=None):
+    if VERIFY_MODE in ("compile", "load", "full"):
+        from repro.core.verify import verify_program
+        verify_program(prog, graph).raise_if_failed()
+
 
 def assert_conformance(graph: LogicGraph, bits: np.ndarray,
                        n_units=N_UNITS, allocs=ALLOCS) -> None:
@@ -55,6 +73,7 @@ def assert_conformance(graph: LogicGraph, bits: np.ndarray,
         for alloc in allocs:
             prog = compile_graph(graph, CompileSpec(n_unit=n_unit, alloc=alloc,
                                                     optimize="none"))
+            _maybe_verify(prog, graph)
             ctx = f"n_unit={n_unit} alloc={alloc}"
             got_np = execute_program_np(prog, bits)
             assert (got_np == want).all(), f"execute_program_np ({ctx})"
@@ -367,12 +386,19 @@ def assert_mega_chain_conformance(graphs, bits, n_units=N_UNITS,
         for alloc in allocs:
             spec = CompileSpec(n_unit=n_unit, alloc=alloc, optimize="none")
             progs = [compile_graph(g, spec) for g in graphs]
+            for p, g in zip(progs, graphs):
+                _maybe_verify(p, g)
             ctx = f"n_unit={n_unit} alloc={alloc}"
             h = bits
             for p in progs:
                 h = logic_infer_bits(p, h, use_ref=False)
             assert (h == want).all(), f"chained pallas launches ({ctx})"
             mega = build_megaprogram(progs, mode="chain")
+            if VERIFY_MODE in ("compile", "load", "full"):
+                from repro.core.gate_ir import compose_graphs
+                from repro.core.verify import verify_megaprogram
+                verify_megaprogram(
+                    mega, compose_graphs(graphs)).raise_if_failed()
             got_np = bits
             for p in progs:
                 got_np = execute_program_np(p, got_np)
@@ -403,6 +429,8 @@ def test_megakernel_partitioned_conformance(n_unit, alloc):
     g = random_graph(rng, 10, 200, 6)
     spec = CompileSpec(n_unit=n_unit, alloc=alloc, optimize="none",
                        max_gates=16)
+    if VERIFY_MODE != "off":
+        spec = spec.with_(verify=VERIFY_MODE)
     art = LogicCompiler().compile(g, spec)
     assert len(art.programs) > 1, "fixture must actually partition"
     bits = _bits(rng, 45, 10)

@@ -72,6 +72,7 @@ def test_program_cache_stats_schema(rng):
         "entries": 1, "hits": 1, "misses": 1, "compiles": 1,
         "compile_failures": 0, "store_hits": 0, "store_misses": 0,
         "store_failures": 0, "store_saves": 0, "store_save_failures": 0,
+        "verifies": 0, "verify_failures": 0,
         "programs": 1}
     assert cache.store is None
 

@@ -1,0 +1,652 @@
+"""Static schedule verifier (core/verify.py): clean-pass matrix and
+mutation-tested detection power.
+
+Two obligations, pinned together because they are meaningless apart:
+
+  * **zero false positives** — every artifact the real toolchain emits
+    (both allocators x n_unit {8, 64} x monolithic / partitioned /
+    chain, compiled fresh or round-tripped through the store) verifies
+    with zero diagnostics;
+  * **100% mutation kill** — every seeded mutation operator (operand
+    swaps, liveness clobbers, NOP hijacks, metadata lies, megaprogram
+    corruption ...) applied to a verified-clean program is detected.
+    Dataflow mutations pick their site by *backward liveness* over the
+    streams — mutating a dead lane is semantics-preserving and MUST NOT
+    be part of the kill gate.
+
+Also here: the §10.4 alias-trust closure (a store entry that passes
+every checksum but encodes a wrong schedule is quarantined on load and
+the request falls back to a clean compile — counter-pinned), the
+``build_megaprogram`` trash-aliasing guard, the ``verify=`` knob
+contract on :class:`CompileSpec`, and hypothesis property sections.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core.artifact_store import ArtifactStore
+from repro.core.compiler import CompiledArtifact, LogicCompiler
+from repro.core.errors import ArtifactIntegrityError
+from repro.core.gate_ir import (LogicGraph, OpCode, compose_graphs,
+                                random_graph)
+from repro.core.opt import Pass, PassManager, PassResult, identity_remap
+from repro.core.partition import (compile_partitions, mega_pipeline,
+                                  output_permutation, partition)
+from repro.core.scheduler import build_megaprogram, compile_graph
+from repro.core.spec import CompileSpec
+from repro.core.verify import (RULE_CODES, ScheduleVerificationError,
+                               certify_remap, effective_mode,
+                               verify_artifact, verify_megaprogram,
+                               verify_program)
+from repro.serve.logic_engine import ProgramCache
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:           # tier-1 containers may lack hypothesis
+    HAVE_HYPOTHESIS = False
+
+N_UNITS = (8, 64)
+ALLOCS = ("direct", "liveness")
+
+NOP = int(OpCode.NOP)
+UNARY_OPS = (int(OpCode.NOT), int(OpCode.COPY))
+
+
+def _graph(rng, n_in=12, n_gates=300, n_out=10):
+    return random_graph(rng, n_inputs=n_in, n_gates=n_gates,
+                        n_outputs=n_out, locality=48)
+
+
+def _mono(rng, n_unit=16, alloc="liveness"):
+    """A verified-clean (program, graph) pair from the real toolchain.
+
+    Compiled with ``optimize="default"`` so structural hashing has run:
+    distinct rows then hold distinct terms, which the operand-directed
+    mutation operators rely on for a guaranteed kill."""
+    g = _graph(rng)
+    art = LogicCompiler().compile(
+        g, CompileSpec(n_unit=n_unit, alloc=alloc))
+    return art.programs[0], art.graph
+
+
+# ---------------------------------------------------------------------------
+# backward liveness: mutation sites that provably reach an output
+# ---------------------------------------------------------------------------
+
+def _live_sites(p):
+    """(step, lane) sites whose write flows to an output read, newest
+    first — the only sites where a dataflow mutation is guaranteed to
+    change an output term."""
+    needed = {int(a) for a in np.asarray(p.output_addrs)}
+    sites = []
+    for s in range(p.n_steps - 1, -1, -1):
+        writers = []            # effective (last-lane-wins) live writers
+        written = set()
+        for u in range(p.n_unit - 1, -1, -1):
+            d, op = int(p.dst[s, u]), int(p.opcode[s, u])
+            if op == NOP and d == p.trash_addr:
+                continue        # padding lane
+            if d in needed and d not in written:
+                written.add(d)
+                writers.append((u, op))
+        reads = set()
+        for u, op in writers:
+            sites.append((s, u))
+            if op != NOP:
+                reads.add(int(p.src_a[s, u]))
+                if op not in UNARY_OPS:
+                    reads.add(int(p.src_b[s, u]))
+        needed -= written
+        needed |= reads
+    return sites
+
+
+def _live_binary_site(p):
+    for s, u in _live_sites(p):
+        op = int(p.opcode[s, u])
+        if op != NOP and op not in UNARY_OPS and \
+                int(p.src_a[s, u]) != int(p.src_b[s, u]):
+            return s, u
+    return None
+
+
+def _mut_array(p, field, fn):
+    arr = np.array(getattr(p, field))
+    fn(arr)
+    return dataclasses.replace(p, **{field: arr})
+
+
+# Each operator: name -> fn(program) returning a mutated program.
+# Every operator must find a site on the standard fixture (asserted).
+
+def _op_swap_operands(p):
+    s, u = _live_binary_site(p)
+    a, b = np.array(p.src_a), np.array(p.src_b)
+    a[s, u], b[s, u] = b[s, u], a[s, u]
+    return dataclasses.replace(p, src_a=a, src_b=b)
+
+
+def _op_duplicate_operand(p):
+    s, u = _live_binary_site(p)
+    b = np.array(p.src_b)
+    b[s, u] = p.src_a[s, u]
+    return dataclasses.replace(p, src_b=b)
+
+
+def _op_opcode_flip(p):
+    s, u = _live_binary_site(p)
+    op = int(p.opcode[s, u])
+    return _mut_array(p, "opcode", lambda a: a.__setitem__(
+        (s, u), int(OpCode.OR) if op != int(OpCode.OR) else int(OpCode.AND)))
+
+
+def _op_nop_hijack(p):
+    pads = np.argwhere((p.opcode == NOP) & (p.dst == p.trash_addr))
+    if not len(pads):
+        return None
+    s, u = map(int, pads[0])
+    return _mut_array(p, "dst", lambda a: a.__setitem__(
+        (s, u), int(np.asarray(p.output_addrs)[0])))
+
+
+def _op_dst_to_trash(p):
+    s, u = _live_sites(p)[0]
+    return _mut_array(p, "dst", lambda a: a.__setitem__(
+        (s, u), p.trash_addr))
+
+
+def _op_step_swap(p):
+    # find a live lane reading a row the PREVIOUS step's live lane wrote
+    sites = set(_live_sites(p))
+    for s, u in sorted(sites):
+        if s == 0 or int(p.opcode[s, u]) == NOP:
+            continue
+        prev_writes = {int(p.dst[s - 1, v])
+                       for v in range(p.n_unit) if (s - 1, v) in sites}
+        reads = {int(p.src_a[s, u])}
+        if int(p.opcode[s, u]) not in UNARY_OPS:
+            reads.add(int(p.src_b[s, u]))
+        if reads & prev_writes:
+            arrays = {}
+            for f in ("src_a", "src_b", "dst", "opcode", "step_opcode",
+                      "homogeneous", "level_of_step"):
+                arr = np.array(getattr(p, f))
+                arr[[s - 1, s]] = arr[[s, s - 1]]
+                arrays[f] = arr
+            return dataclasses.replace(p, **arrays)
+    return None
+
+
+def _op_oob_read(p):
+    s, u = _live_sites(p)[0]
+    return _mut_array(p, "src_a", lambda a: a.__setitem__((s, u), p.n_addr))
+
+
+def _op_lane_chop(p):
+    if p.n_unit < 2:
+        return None
+    return dataclasses.replace(
+        p, src_a=p.src_a[:, :-1], src_b=p.src_b[:, :-1],
+        dst=p.dst[:, :-1], opcode=p.opcode[:, :-1])
+
+
+def _op_homog_lie(p):
+    h = np.array(p.homogeneous)
+    h[0] = ~h[0].astype(bool)
+    return dataclasses.replace(p, homogeneous=h)
+
+
+def _op_input_shift(p):
+    return dataclasses.replace(
+        p, input_addrs=np.asarray(p.input_addrs) + 1)
+
+
+def _op_output_swap(p):
+    outs = np.array(p.output_addrs)
+    pairs = [(j, k) for j in range(len(outs)) for k in range(j + 1,
+             len(outs)) if outs[j] != outs[k]]
+    if not pairs:
+        return None
+    j, k = pairs[0]
+    outs[j], outs[k] = outs[k], outs[j]
+    return dataclasses.replace(p, output_addrs=outs)
+
+
+def _op_output_to_trash(p):
+    outs = np.array(p.output_addrs)
+    outs[0] = p.trash_addr
+    return dataclasses.replace(p, output_addrs=outs)
+
+
+def _op_trash_alias(p):
+    return dataclasses.replace(p, trash_addr=2)   # first input row
+
+
+def _op_step_dup(p):
+    s = _live_sites(p)[0][0]
+    arrays = {}
+    for f in ("src_a", "src_b", "dst", "opcode", "step_opcode",
+              "homogeneous", "level_of_step"):
+        arr = np.asarray(getattr(p, f))
+        arrays[f] = np.concatenate([arr, arr[s:s + 1]], axis=0)
+    return dataclasses.replace(p, **arrays)
+
+
+def _op_gates_lie(p):
+    return dataclasses.replace(p, n_gates=p.n_gates + 1)
+
+
+MUTATIONS = {
+    "swap-operands": _op_swap_operands,
+    "duplicate-operand": _op_duplicate_operand,
+    "opcode-flip": _op_opcode_flip,
+    "nop-hijack": _op_nop_hijack,
+    "dst-to-trash": _op_dst_to_trash,
+    "step-swap": _op_step_swap,
+    "oob-read": _op_oob_read,
+    "lane-chop": _op_lane_chop,
+    "homog-lie": _op_homog_lie,
+    "input-shift": _op_input_shift,
+    "output-swap": _op_output_swap,
+    "output-to-trash": _op_output_to_trash,
+    "trash-alias": _op_trash_alias,
+    "step-dup": _op_step_dup,
+    "gates-lie": _op_gates_lie,
+}
+
+
+# ---------------------------------------------------------------------------
+# vocabulary + knob contract
+# ---------------------------------------------------------------------------
+
+def test_rule_code_vocabulary_pinned():
+    assert RULE_CODES == tuple(f"V{c}" for c in range(101, 116))
+
+
+def test_verify_knob_contract():
+    with pytest.raises(ValueError, match="verify"):
+        CompileSpec(verify="paranoid")
+    on = CompileSpec(n_unit=16, verify="full")
+    off = CompileSpec(n_unit=16)
+    # operational knob: same identity, same serialization, same key —
+    # verify-on and verify-off fleets must share store entries
+    assert on == off
+    assert on.cache_key() == off.cache_key()
+    assert on.to_dict() == off.to_dict()
+    assert "verify" not in on.to_dict()
+    # ... but from_dict still accepts the key (forward tooling)
+    assert CompileSpec.from_dict({**on.to_dict(), "verify": "full"}
+                                 ).verify == "full"
+    assert effective_mode("off", None) == "off"
+    assert effective_mode("off", "load") == "load"
+    assert effective_mode("compile", "full") == "compile"
+    with pytest.raises(ValueError, match="verify"):
+        LogicCompiler(verify="sometimes")
+
+
+# ---------------------------------------------------------------------------
+# zero false positives: the clean conformance matrix
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("alloc", ALLOCS)
+@pytest.mark.parametrize("n_unit", N_UNITS)
+def test_clean_monolithic(rng, alloc, n_unit):
+    g = _graph(rng)
+    art = LogicCompiler().compile(
+        g, CompileSpec(n_unit=n_unit, alloc=alloc, verify="full"))
+    report = verify_artifact(art)
+    assert report.ok, report.summary()
+    report = verify_program(art.programs[0], art.graph)
+    assert report.ok, report.summary()
+    # program-only (no graph) verification is a strict subset
+    assert verify_program(art.programs[0]).ok
+
+
+@pytest.mark.parametrize("alloc", ALLOCS)
+@pytest.mark.parametrize("n_unit", N_UNITS)
+def test_clean_partitioned(rng, alloc, n_unit):
+    g = _graph(rng)
+    art = LogicCompiler().compile(
+        g, CompileSpec(n_unit=n_unit, alloc=alloc, max_gates=120,
+                       verify="full"))
+    assert len(art.programs) > 1
+    report = verify_artifact(art)      # includes the parallel megaprogram
+    assert report.ok, report.summary()
+
+
+@pytest.mark.parametrize("alloc", ALLOCS)
+@pytest.mark.parametrize("n_unit", N_UNITS)
+def test_clean_chain(rng, alloc, n_unit):
+    g1 = _graph(rng)
+    g2 = random_graph(rng, n_inputs=g1.n_outputs, n_gates=200,
+                      n_outputs=8, locality=32)
+    spec = CompileSpec(n_unit=n_unit, alloc=alloc, optimize="none")
+    progs = [compile_graph(g, spec) for g in (g1, g2)]
+    mega = build_megaprogram(progs, mode="chain", name="chain")
+    composed = compose_graphs([g1, g2], name="composed")
+    report = verify_megaprogram(mega, composed)
+    assert report.ok, report.summary()
+
+
+def test_clean_store_roundtrip(rng, tmp_path):
+    g = _graph(rng)
+    store = ArtifactStore(tmp_path / "store", verify_on_load=True)
+    spec = CompileSpec(n_unit=16)
+    cache = ProgramCache(store=store)
+    cache.get(g, spec)
+    # a fresh process loads the published artifact; verify_on_load means
+    # the store itself re-proves the schedule before returning it
+    warm = ProgramCache(store=store)
+    entry = warm.get(g, spec)
+    assert warm.stats()["compiles"] == 0
+    assert verify_artifact(entry.artifact).ok
+
+
+def test_clean_get_chain(rng):
+    g1 = _graph(rng)
+    g2 = random_graph(rng, n_inputs=g1.n_outputs, n_gates=150,
+                      n_outputs=6, locality=32)
+    cache = ProgramCache()
+    entry = cache.get_chain([g1, g2], CompileSpec(n_unit=16,
+                                                  verify="compile"))
+    assert cache.stats()["verifies"] == 1
+    assert verify_artifact(entry.artifact).ok
+
+
+# ---------------------------------------------------------------------------
+# 100% mutation kill
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(MUTATIONS))
+@pytest.mark.parametrize("alloc", ALLOCS)
+def test_mutation_killed(rng, name, alloc):
+    prog, graph = _mono(rng, alloc=alloc)
+    assert verify_program(prog, graph).ok       # clean before mutation
+    mutated = MUTATIONS[name](prog)
+    assert mutated is not None, f"operator {name} found no site"
+    report = verify_program(mutated, graph)
+    assert not report.ok, f"mutation {name} survived verification"
+    assert all(d.code in RULE_CODES for d in report.diagnostics)
+
+
+def test_mutation_sites_are_live(rng):
+    """The site picker only returns output-reaching lanes: zeroing any
+    NON-site lane's write must keep the outputs' terms intact (i.e. the
+    harness never wastes a kill obligation on dead code)."""
+    prog, graph = _mono(rng)
+    live = set(_live_sites(prog))
+    assert live, "no live sites on a 300-gate program?"
+    # every output row's final writer is a live site
+    for a in np.asarray(prog.output_addrs):
+        hits = np.argwhere(prog.dst == int(a))
+        s, u = map(int, hits[hits[:, 0].argmax()])
+        assert (s, u) in live
+
+
+MEGA_MUTATIONS = {}
+
+
+def _mega_op(fn):
+    MEGA_MUTATIONS[fn.__name__.replace("_mop_", "").replace("_", "-")] = fn
+    return fn
+
+
+@_mega_op
+def _mop_meta_shift(m):
+    meta = list(m.stage_meta)
+    lo, hi, ni, no, olo = meta[-1]
+    meta[-1] = (lo + 1, hi, ni, no, olo)
+    return dataclasses.replace(m, stage_meta=tuple(meta))
+
+
+@_mega_op
+def _mop_naddr_shrink(m):
+    return dataclasses.replace(m, n_addr=m.n_addr - 1)
+
+
+@_mega_op
+def _mop_perm_break(m):
+    perm = np.array(m.output_perm)
+    if len(perm) < 2:
+        return None
+    perm[0] = perm[1]
+    return dataclasses.replace(m, output_perm=perm)
+
+
+@_mega_op
+def _mop_step_trash_corrupt(m):
+    st_ = np.array(m.step_trash)
+    st_[0] = 0
+    return dataclasses.replace(m, step_trash=st_)
+
+
+@_mega_op
+def _mop_stream_corrupt(m):
+    dst = np.array(m.dst)
+    dst[0, 0] = m.n_addr - 1 if dst[0, 0] != m.n_addr - 1 else 0
+    return dataclasses.replace(m, dst=dst)
+
+
+@_mega_op
+def _mop_out_addrs_corrupt(m):
+    oa = np.array(m.out_addrs)
+    oa[0] = (oa[0] + 1) % m.n_addr
+    return dataclasses.replace(m, out_addrs=oa)
+
+
+@pytest.mark.parametrize("name", sorted(MEGA_MUTATIONS))
+@pytest.mark.parametrize("mode", ("chain", "parallel"))
+def test_mega_mutation_killed(rng, name, mode):
+    g = _graph(rng)
+    if mode == "chain":
+        g2 = random_graph(rng, n_inputs=g.n_outputs, n_gates=150,
+                          n_outputs=6, locality=32)
+        spec = CompileSpec(n_unit=16, optimize="none")
+        progs = [compile_graph(x, spec) for x in (g, g2)]
+        mega = build_megaprogram(progs, mode="chain")
+        graph = compose_graphs([g, g2])
+    else:
+        spec = CompileSpec(n_unit=16, optimize="none", max_gates=120)
+        parts = partition(g, spec)
+        progs = compile_partitions(parts, spec)
+        perm = output_permutation(parts, g.n_outputs)
+        mega = mega_pipeline(progs, perm, mode="parallel")
+        graph = g
+    assert verify_megaprogram(mega, graph).ok
+    mutated = MEGA_MUTATIONS[name](mega)
+    if mutated is None:
+        pytest.skip(f"no site for {name} in mode {mode}")
+    report = verify_megaprogram(mutated, graph)
+    assert not report.ok, f"mega mutation {name} survived"
+    assert all(d.code in RULE_CODES for d in report.diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# the build_megaprogram trash-aliasing guard (satellite regression)
+# ---------------------------------------------------------------------------
+
+def test_megaprogram_rejects_trash_aliasing_stage():
+    """A stage whose trash row aliases an input row (only reachable via
+    an untrusted ``from_payload``) must be refused at build time — its
+    padding lanes would clobber the stage's own input preload."""
+    g = LogicGraph(2, name="tiny")
+    w = g.add_gate(OpCode.AND, 2, 3)
+    g.set_outputs([g.add_gate(OpCode.XOR, w, 2)])
+    prog = compile_graph(g, CompileSpec(n_unit=4, optimize="none"))
+    assert verify_program(prog, g).ok
+    bad = dataclasses.replace(prog, trash_addr=2)      # input row 0
+    report = verify_program(bad, g)
+    assert not report.ok
+    assert any(d.code == "V104" for d in report.diagnostics)
+    with pytest.raises(ValueError, match="aliases"):
+        build_megaprogram([bad, bad], mode="parallel")
+
+
+# ---------------------------------------------------------------------------
+# §10.4 closure: verifier-rejected store entries quarantine + fall back
+# ---------------------------------------------------------------------------
+
+def _poisoned_store(tmp_path, g, spec):
+    """A store holding a checksum-valid but schedule-WRONG artifact for
+    (g, spec), alias record included — §10.4's trust hole made flesh."""
+    store = ArtifactStore(tmp_path / "store")
+    opt = spec.pipeline.run(g).graph
+    mono = spec.normalize(opt).with_(optimize="none")
+    prog = compile_graph(opt, mono)
+    bad = _op_swap_operands(prog)
+    art = CompiledArtifact(
+        spec=mono, graph=opt, programs=(bad,),
+        output_perm=np.arange(opt.n_outputs, dtype=np.int64))
+    key = store.save(art)
+    store.save_alias(g.fingerprint(), spec, key)
+    return store, key
+
+
+def test_verifier_rejects_poisoned_store_entry(rng, tmp_path):
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=16, verify="load")
+    store, key = _poisoned_store(tmp_path, g, spec)
+    cache = ProgramCache(store=store)
+    entry = cache.get(g, spec)
+    # the poisoned artifact was loaded (via the alias fast path),
+    # rejected BEFORE any memo was seeded, quarantined, and the request
+    # fell back to a clean compile + write-through at the same key
+    stats = cache.stats()
+    assert stats["verifies"] == 1
+    assert stats["verify_failures"] == 1
+    assert stats["compiles"] == 1
+    assert stats["store_hits"] == 0
+    assert verify_artifact(entry.artifact).ok
+    assert store.quarantined == 1
+    assert key in store                      # re-published clean
+    assert verify_artifact(store.load_key(key)).ok
+    # a second fresh process warm-starts from the re-published entry
+    warm = ProgramCache(store=store)
+    warm.get(g, spec)
+    assert warm.stats()["compiles"] == 0
+    assert warm.stats()["verify_failures"] == 0
+
+
+def test_verifier_off_trusts_poisoned_entry(rng, tmp_path):
+    """Without the knob the §10.4 trust model is unchanged (checksums
+    only) — pinning that the default stays cheap and the closure is an
+    opt-in."""
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=16)            # verify="off"
+    store, _ = _poisoned_store(tmp_path, g, CompileSpec(
+        n_unit=16, verify="load"))
+    cache = ProgramCache(store=store)
+    cache.get(g, spec)
+    stats = cache.stats()
+    assert stats["verifies"] == 0 and stats["compiles"] == 0
+    assert stats["store_hits"] == 1
+
+
+def test_store_verify_on_load_knob(rng, tmp_path):
+    g = _graph(rng)
+    spec = CompileSpec(n_unit=16, verify="load")
+    store, key = _poisoned_store(tmp_path, g, spec)
+    checking = ArtifactStore(store.root, verify_on_load=True)
+    with pytest.raises(ArtifactIntegrityError, match="verification"):
+        checking.load_key(key)
+    assert checking.quarantined == 1
+
+
+# ---------------------------------------------------------------------------
+# compile-path gating: ScheduleVerificationError + remap certificates
+# ---------------------------------------------------------------------------
+
+class _BrokenPass(Pass):
+    """Rewrites nothing but lies about the wire map (drops outputs)."""
+
+    name = "broken"
+
+    def run(self, graph):
+        remap = identity_remap(graph)
+        remap[graph.outputs[0]] = -1
+        return PassResult(graph, remap)
+
+
+def test_certify_remap_catches_broken_pass(rng):
+    g = _graph(rng)
+    res = _BrokenPass().run(g)
+    diags = certify_remap(g, res.graph, res.remap, label="broken")
+    assert diags and all(d.code == "V115" for d in diags)
+    pm = PassManager([_BrokenPass()], name="bad-pipeline")
+    with pytest.raises(ScheduleVerificationError) as e:
+        pm.run(g, certify=True)
+    assert any(d.code == "V115" for d in e.value.report.diagnostics)
+    # certify=False (the default) keeps the historical trust model
+    pm.run(g)
+
+
+def test_identity_remap_certifies_clean(rng):
+    g = _graph(rng)
+    assert certify_remap(g, g, identity_remap(g)) == []
+
+
+def test_compile_verify_raises_on_broken_pipeline(rng):
+    g = _graph(rng)
+    pm = PassManager([_BrokenPass()], name="bad-pipeline")
+    spec = CompileSpec(n_unit=16, optimize=pm, verify="compile")
+    with pytest.raises(ScheduleVerificationError):
+        LogicCompiler().compile(g, spec)
+    # compiler-level default has the same effect on a plain spec
+    with pytest.raises(ScheduleVerificationError):
+        LogicCompiler(verify="compile").compile(
+            g, CompileSpec(n_unit=16, optimize=pm))
+    # and verify="off" compiles the same spec without the gate
+    LogicCompiler().compile(g, CompileSpec(n_unit=16, optimize=pm))
+
+
+# ---------------------------------------------------------------------------
+# hypothesis property sections
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=20, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           n_unit=st.sampled_from((4, 16, 64)),
+           alloc=st.sampled_from(ALLOCS),
+           n_gates=st.integers(8, 220))
+    def test_property_compiled_programs_verify_clean(seed, n_unit, alloc,
+                                                     n_gates):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng, n_inputs=8, n_gates=n_gates, n_outputs=6,
+                         locality=24)
+        art = LogicCompiler().compile(
+            g, CompileSpec(n_unit=n_unit, alloc=alloc, verify="full"))
+        report = verify_artifact(art)
+        assert report.ok, report.summary()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           alloc=st.sampled_from(ALLOCS),
+           max_gates=st.sampled_from((60, 120)))
+    def test_property_partitioned_verifies_clean(seed, alloc, max_gates):
+        rng = np.random.default_rng(seed)
+        g = random_graph(rng, n_inputs=10, n_gates=260, n_outputs=8,
+                         locality=32)
+        art = LogicCompiler().compile(
+            g, CompileSpec(n_unit=8, alloc=alloc, max_gates=max_gates,
+                           verify="full"))
+        report = verify_artifact(art)
+        assert report.ok, report.summary()
+
+    @settings(max_examples=10, deadline=None)
+    @given(seed=st.integers(0, 2**32 - 1),
+           alloc=st.sampled_from(ALLOCS))
+    def test_property_chain_verifies_clean(seed, alloc):
+        rng = np.random.default_rng(seed)
+        g1 = random_graph(rng, n_inputs=8, n_gates=120, n_outputs=7,
+                          locality=24)
+        g2 = random_graph(rng, n_inputs=7, n_gates=90, n_outputs=5,
+                          locality=24)
+        spec = CompileSpec(n_unit=16, alloc=alloc, optimize="none")
+        mega = build_megaprogram(
+            [compile_graph(g, spec) for g in (g1, g2)], mode="chain")
+        report = verify_megaprogram(mega, compose_graphs([g1, g2]))
+        assert report.ok, report.summary()
